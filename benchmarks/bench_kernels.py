@@ -1,0 +1,90 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (correctness,
+not speed), so the numbers that matter here are (a) XLA wall-time of the
+reference vs the chunked pure-XLA attention (the memory-bounded fallback the
+dry-run lowers), and (b) allclose deltas of the Pallas kernels vs ref at
+benchmark shapes.  TPU wall-time belongs to the roofline analysis.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.registry import get_smoke_config
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.hier_mix import hier_mix_chunks
+from repro.models.attention import _sdpa, _sdpa_chunked, causal_mask
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)                         # compile
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def bench_attention_impls():
+    cfg = get_smoke_config("qwen3-1.7b")
+    b, s, h, hkv, hd = 1, 1024, 4, 2, 64
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(key, (b, s, hkv, hd), jnp.float32)
+    v = jax.random.normal(key, (b, s, hkv, hd), jnp.float32)
+
+    mask = causal_mask(s, s, 0)[None]
+    f_full = jax.jit(lambda q, k, v: _sdpa(q, k, v, cfg, mask))
+    f_chunk = jax.jit(lambda q, k, v: _sdpa_chunked(q, k, v, cfg, block_q=256))
+    t_full = _time(f_full, q, k, v)
+    t_chunk = _time(f_chunk, q, k, v)
+    emit("kernels/attention/xla_full_us", t_full)
+    emit("kernels/attention/xla_chunked_us", t_chunk)
+    np.testing.assert_allclose(np.asarray(f_full(q, k, v)),
+                               np.asarray(f_chunk(q, k, v)), atol=2e-5)
+    emit("kernels/attention/chunked_matches_full", 1)
+
+    out = flash_attention_fwd(q[:, :256], k[:, :256], v[:, :256],
+                              causal=True, interpret=True)
+    want = ref.flash_attention_ref(q[:, :256], k[:, :256], v[:, :256],
+                                   causal=True)
+    err = float(jnp.abs(out - want).max())
+    emit("kernels/flash_attention/interpret_max_err", err)
+    assert err < 1e-4
+
+
+def bench_hier_mix():
+    w, c = 32, 1 << 16
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (w, c), jnp.float32)
+    g = jax.random.normal(jax.random.fold_in(key, 1), (w, c), jnp.float32)
+    t_op = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 2),
+                                            (w, w)), axis=0)
+    theta = jnp.ones((w,))
+    f_ref = jax.jit(lambda: ref.hier_mix_ref(x, g, t_op, theta, 0.1))
+    t_ref = _time(lambda: f_ref())
+    emit("kernels/hier_mix/xla_ref_us", t_ref)
+    out = hier_mix_chunks(x[:, :4096], g[:, :4096], t_op, theta, 0.1,
+                          interpret=True)
+    want = ref.hier_mix_ref(x[:, :4096], g[:, :4096], t_op, theta, 0.1)
+    err = float(jnp.abs(out - want).max())
+    emit("kernels/hier_mix/interpret_max_err", err)
+    assert err < 1e-4
+    # fused traffic model: unfused = read x,g + write u, read u + write out
+    # (2 passes over params); fused = read x,g + write out (1 pass) -> ~1.5x
+    emit("kernels/hier_mix/fusion_traffic_ratio", 5.0 / 3.0)
+
+
+def main(full: bool = False):
+    bench_attention_impls()
+    bench_hier_mix()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Beyond-paper benchmark: hub-level outer optimizer (DiLoCo-style Nesterov
+on the hub delta) vs the paper's plain Z-averaging, in the drift-heavy
+regime where outer momentum should matter: long local periods (tau=16, q=2)
+and heterogeneous worker rates.
+
+Claims checked (reported, not asserted):
+  * lr=1, beta=0 reproduces plain MLL-SGD (strict superset — also a test)
+  * momentum variants track or beat plain averaging per hub round
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BenchScale, emit, make_model
+from repro.core.mllsgd import MLLConfig, build_network, build_state, mll_train_step
+from repro.core.outer import OuterConfig, init_outer_state, mll_outer_train_step
+from repro.core.simulator import weighted_average
+from repro.data.pipeline import make_classification
+
+
+def run(scale: BenchScale, model: str = "mlp") -> dict:
+    tau, q = 16, 2
+    rates = tuple([1.0, 0.9, 0.8, 0.7, 1.0] * (scale.workers // 5))
+    cfg = MLLConfig(tau=tau, q=q, eta=scale.eta, hub_topology="ring",
+                    worker_rates=rates)
+    net = build_network(cfg, scale.subnets, scale.workers // scale.subnets)
+    st = build_state(cfg, net)
+    w = net.num_workers
+    data = make_classification(w, scale.per_worker, dim=24, num_classes=8,
+                               seed=0)
+    init, loss_fn, acc_fn = make_model(model)
+    grad_fn = jax.jit(jax.vmap(jax.grad(loss_fn)))
+    loss_eval = jax.jit(loss_fn)
+    a = jnp.asarray(net.a, jnp.float32)
+    full = data.full
+
+    def batchify(key):
+        idx = jax.random.randint(key, (w, scale.batch), 0,
+                                 data.worker_x.shape[1])
+        take = lambda z: jnp.take_along_axis(
+            z, idx.reshape(w, scale.batch, *([1] * (z.ndim - 2))), axis=1)
+        return {"x": take(data.worker_x), "y": take(data.worker_y[..., None])[..., 0]}
+
+    variants = {
+        "plain": None,
+        "outer_lr1_b0": OuterConfig(lr=1.0, beta=0.0),
+        "outer_lr0.7_b0.9": OuterConfig(lr=0.7, beta=0.9),
+        "outer_lr1_b0.5": OuterConfig(lr=1.0, beta=0.5),
+    }
+    out = {}
+    for name, ocfg in variants.items():
+        t0 = time.time()
+        key = jax.random.PRNGKey(1)
+        x = jax.tree.map(lambda z: jnp.broadcast_to(z[None], (w,) + z.shape),
+                         init)
+        outer = init_outer_state(x)
+        step_plain = jax.jit(lambda p, g, s: mll_train_step(p, g, s, cfg, st))
+        step_outer = jax.jit(lambda p, o, g, s: mll_outer_train_step(
+            p, o, g, s, cfg, st, ocfg)) if ocfg else None
+        for k in range(1, scale.steps + 1):
+            key, kb = jax.random.split(key)
+            grads = grad_fn(x, batchify(kb))
+            if ocfg is None:
+                x = step_plain(x, grads, jnp.asarray(k))
+            else:
+                x, outer = step_outer(x, outer, grads, jnp.asarray(k))
+        u = weighted_average(x, a)
+        fl = float(loss_eval(u, full))
+        out[name] = fl
+        emit(f"outer/{model}/{name}/final_loss", fl, t0=t0)
+    emit("outer/claim/lr1_b0_equals_plain",
+         int(abs(out["outer_lr1_b0"] - out["plain"]) < 1e-5))
+    best_outer = min(v for k, v in out.items() if k.startswith("outer_lr0")
+                     or k.startswith("outer_lr1_b0.5"))
+    emit("outer/claim/momentum_competitive", int(best_outer < out["plain"] * 1.2))
+    return out
+
+
+def main(full: bool = False):
+    scale = BenchScale.paper() if full else BenchScale(steps=768)
+    run(scale, "mlp")
+
+
+if __name__ == "__main__":
+    main()

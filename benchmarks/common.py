@@ -1,0 +1,98 @@
+"""Shared task setup for the paper-figure benchmarks.
+
+The paper trains a CNN on EMNIST, ResNet-18 on CIFAR-10, and logistic
+regression on MNIST.  Offline we reproduce the *trend claims* on synthetic
+mixture-of-Gaussians data with (a) logistic regression (convex, Appendix B)
+and (b) a 2-layer MLP (non-convex, stands in for the CNN).  Scales are
+reduced for the single-CPU container (workers 20 vs 100, steps ~1-2k vs 32k);
+``--full`` restores paper-scale settings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hierarchy import MLLSchedule, MultiLevelNetwork
+from repro.core.simulator import SimConfig, SimResult, simulate
+from repro.data.pipeline import make_classification
+
+DIM, CLASSES = 24, 8
+
+
+@dataclasses.dataclass
+class BenchScale:
+    workers: int = 20
+    subnets: int = 4
+    per_worker: int = 512
+    steps: int = 1024
+    eta: float = 0.1
+    batch: int = 16
+
+    @staticmethod
+    def paper() -> "BenchScale":
+        return BenchScale(workers=100, subnets=10, per_worker=512,
+                          steps=8192, eta=0.1, batch=16)
+
+
+def make_model(kind: str, key=None):
+    """-> (init_params, loss_fn, acc_fn)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    if kind == "logreg":
+        init = {"w": jnp.zeros((DIM, CLASSES)), "b": jnp.zeros((CLASSES,))}
+
+        def logits_fn(p, x):
+            return x @ p["w"] + p["b"]
+    elif kind == "mlp":
+        h = 64
+        k1, k2 = jax.random.split(key)
+        init = {
+            "w1": jax.random.normal(k1, (DIM, h)) / np.sqrt(DIM),
+            "b1": jnp.zeros((h,)),
+            "w2": jax.random.normal(k2, (h, CLASSES)) / np.sqrt(h),
+            "b2": jnp.zeros((CLASSES,)),
+        }
+
+        def logits_fn(p, x):
+            z = jax.nn.relu(x @ p["w1"] + p["b1"])
+            return z @ p["w2"] + p["b2"]
+    else:
+        raise ValueError(kind)
+
+    def loss_fn(p, batch):
+        logits = logits_fn(p, batch["x"])
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, batch["y"][:, None], axis=1)[:, 0]
+        return (lse - gold).mean()
+
+    def acc_fn(p, batch):
+        logits = logits_fn(p, batch["x"])
+        return (jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32).mean()
+
+    return init, loss_fn, acc_fn
+
+
+def run_sim(net: MultiLevelNetwork, sched: MLLSchedule, scale: BenchScale,
+            *, model: str = "logreg", seed: int = 0,
+            shares: np.ndarray | None = None) -> SimResult:
+    data = make_classification(net.num_workers, scale.per_worker, dim=DIM,
+                               num_classes=CLASSES, test_size=1024,
+                               seed=seed, shares=shares)
+    init, loss_fn, acc_fn = make_model(model)
+    return simulate(loss_fn, acc_fn, init, data.worker_data(), data.full,
+                    data.test, net, sched, steps=scale.steps,
+                    cfg=SimConfig(eta=scale.eta, batch_size=scale.batch),
+                    seed=seed)
+
+
+def emit(name: str, value, *, t0: float | None = None, extra: str = ""):
+    """CSV line: name,value[,seconds][,extra]."""
+    parts = [name, f"{value:.6f}" if isinstance(value, float) else str(value)]
+    if t0 is not None:
+        parts.append(f"{time.time() - t0:.1f}s")
+    if extra:
+        parts.append(extra)
+    print(",".join(parts), flush=True)

@@ -1,0 +1,158 @@
+"""§Roofline aggregation: reads the dry-run JSONs produced by
+benchmarks/dryrun_sweep.py and emits the roofline table.
+
+Per (arch x shape) on the single-pod 16x16 mesh:
+  compute / memory / collective terms (seconds per step), dominant term,
+  MODEL_FLOPS, MODEL_FLOPS / HLO_FLOPS (useful-compute fraction), and for
+  train combos the (tau=8, q=4)-amortized collective term derived from the
+  per-phase lowerings:
+
+    coll_amortized = coll(local)
+                   + (coll(subnet) - coll(local)) * (q-1)/(q*tau)
+                   + (coll(hub)    - coll(local)) * 1/(q*tau)
+
+The multi-pod (2,16,16) rows prove the pod axis shards (presence + DCN
+bytes); per the brief the roofline table itself is single-pod.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--md results/roofline.md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks.dryrun_sweep import ARCHES, OUT_DIR, SHAPES, combo_path
+
+TAU, Q = 8, 4
+
+
+def load(arch, shape, mesh, tag=""):
+    p = combo_path(arch, shape, mesh, tag)
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        data = json.load(f)
+    return data[0] if data else None
+
+
+def fmt_s(x):
+    return f"{x:.3e}" if x is not None else "—"
+
+
+def amortized_collective(arch, mesh) -> float | None:
+    rs = {ph: load(arch, "train_4k", mesh, ph)
+          for ph in ("local", "subnet", "hub")}
+    if any(r is None or "error" in r for r in rs.values()):
+        return None
+    c = {ph: r["roofline"]["collective_s"] for ph, r in rs.items()}
+    period = TAU * Q
+    return (c["local"] + (c["subnet"] - c["local"]) * (Q - 1) / period
+            + (c["hub"] - c["local"]) / period)
+
+
+def rows(mesh="16x16"):
+    out = []
+    for arch in ARCHES:
+        for shape in SHAPES:
+            r = load(arch, shape, mesh)
+            if r is None:
+                out.append({"arch": arch, "shape": shape, "status": "MISSING"})
+                continue
+            if "error" in r:
+                out.append({"arch": arch, "shape": shape, "status": "FAIL"})
+                continue
+            rl = r["roofline"]
+            row = {
+                "arch": arch, "shape": shape, "status": "ok",
+                "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+                "collective_s": rl["collective_s"],
+                "dominant": rl["dominant"],
+                "model_flops": r["model_flops"],
+                "hlo_flops": rl["flops"],
+                "useful": (r["model_flops"] / rl["flops"]
+                           if rl["flops"] else 0.0),
+                "granularity": r.get("granularity", ""),
+                "coll_bytes": rl["collective_bytes"],
+                "dcn_bytes": rl.get("dcn_bytes", 0.0),
+                "temp_bytes": r.get("memory_analysis", {}).get(
+                    "temp_size_in_bytes"),
+            }
+            if shape == "train_4k":
+                row["coll_amortized_s"] = amortized_collective(arch, mesh)
+            out.append(row)
+    return out
+
+
+def print_table(mesh="16x16"):
+    hdr = (f"{'arch':22s} {'shape':12s} {'compute':>10s} {'memory':>10s} "
+           f"{'coll':>10s} {'coll~':>10s} {'dom':>10s} {'MF/HF':>6s}")
+    print(f"== roofline {mesh} (seconds/step; coll~ = (tau,q)-amortized) ==")
+    print(hdr)
+    for r in rows(mesh):
+        if r["status"] != "ok":
+            print(f"{r['arch']:22s} {r['shape']:12s} {r['status']}")
+            continue
+        print(f"{r['arch']:22s} {r['shape']:12s} {fmt_s(r['compute_s']):>10s} "
+              f"{fmt_s(r['memory_s']):>10s} {fmt_s(r['collective_s']):>10s} "
+              f"{fmt_s(r.get('coll_amortized_s')):>10s} "
+              f"{r['dominant']:>10s} {r['useful']:6.2f}")
+
+
+def markdown(mesh="16x16") -> str:
+    lines = [
+        f"| arch | shape | gran | compute s | memory s | collective s | "
+        f"amortized coll s | dominant | MODEL/HLO flops |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows(mesh):
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | | | | | | "
+                         f"**{r['status']}** | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['granularity']} | "
+            f"{fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} | "
+            f"{fmt_s(r['collective_s'])} | "
+            f"{fmt_s(r.get('coll_amortized_s'))} | {r['dominant']} | "
+            f"{r['useful']:.2f} |")
+    return "\n".join(lines)
+
+
+def multipod_proof() -> str:
+    lines = ["| arch | shape | status | DCN bytes/step (global) | dominant |",
+             "|---|---|---|---|---|"]
+    for arch in ARCHES:
+        for shape in SHAPES:
+            r = load(arch, shape, "pod2x16x16")
+            if r is None:
+                lines.append(f"| {arch} | {shape} | MISSING | | |")
+            elif "error" in r:
+                lines.append(f"| {arch} | {shape} | **FAIL** | | |")
+            else:
+                rl = r["roofline"]
+                lines.append(f"| {arch} | {shape} | ok | "
+                             f"{rl.get('dcn_bytes', 0)/1e9:.2f} GB | "
+                             f"{rl['dominant']} |")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--md", default=None)
+    args = ap.parse_args(argv)
+    print_table("16x16")
+    ok = sum(1 for r in rows("pod2x16x16") if r["status"] == "ok")
+    print(f"multipod proof: {ok}/40 combos compiled")
+    if args.md:
+        with open(args.md, "w") as f:
+            f.write("## Roofline (single-pod 16x16)\n\n")
+            f.write(markdown("16x16"))
+            f.write("\n\n## Multi-pod proof (2x16x16)\n\n")
+            f.write(multipod_proof())
+            f.write("\n")
+        print(f"wrote {args.md}")
+
+
+if __name__ == "__main__":
+    main()

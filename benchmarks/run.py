@@ -1,0 +1,48 @@
+"""Benchmark aggregator: one section per paper table/figure plus the
+roofline report.  Prints ``name,value[,seconds][,extra]`` CSV lines.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--skip-sim]
+
+The dry-run sweep (results/dryrun/*.json) is produced separately by
+``python -m benchmarks.dryrun_sweep`` because it needs 512 placeholder
+devices in fresh subprocesses; this runner only aggregates whatever exists.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale settings (100 workers, 8k+ steps)")
+    ap.add_argument("--skip-sim", action="store_true",
+                    help="only kernels + roofline aggregation")
+    args = ap.parse_args(argv)
+
+    t0 = time.time()
+    from benchmarks import (bench_kernels, bench_outer, bench_rates,
+                            bench_tau_q, bench_timeslot, bench_topology,
+                            roofline)
+
+    print("# kernels")
+    bench_kernels.main(full=args.full)
+    if not args.skip_sim:
+        print("# fig1/7: tau-q hierarchy")
+        bench_tau_q.main(full=args.full)
+        print("# fig2/3/8: topology")
+        bench_topology.main(full=args.full)
+        print("# fig4/5/9: heterogeneous rates")
+        bench_rates.main(full=args.full)
+        print("# fig6/10: time-slot race")
+        bench_timeslot.main(full=args.full)
+        print("# beyond-paper: hub outer optimizer")
+        bench_outer.main(full=args.full)
+    print("# roofline")
+    roofline.main([])
+    print(f"total,{time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Quickstart: MLL-SGD on a 3-level toy problem in ~40 lines of public API.
+
+Builds a 3-subnet ring network with heterogeneous workers, trains logistic
+regression with the paper's Algorithm 1 (simulator path), and compares
+against Distributed SGD.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import MLLSchedule, SimConfig, baselines, simulate
+from repro.data.pipeline import make_classification
+
+# --- network: 3 sub-networks x 4 workers, ring hub graph, mixed speeds ----
+rates = [1.0, 0.9, 0.7, 0.6] * 3          # p_i: prob. of a step per tick
+net, sched = baselines.mll_sgd("ring", [4, 4, 4], tau=8, q=4,
+                               worker_rates=rates)
+print(f"workers={net.num_workers} subnets={net.num_subnets} "
+      f"zeta={net.zeta:.3f} avg_rate P={net.avg_rate:.2f}")
+
+# --- data + model ---------------------------------------------------------
+data = make_classification(net.num_workers, 512, dim=16, num_classes=4)
+
+
+def loss_fn(params, batch):
+    logits = batch["x"] @ params["w"] + params["b"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["y"][:, None], axis=1)[:, 0]
+    return (lse - gold).mean()
+
+
+def acc_fn(params, batch):
+    logits = batch["x"] @ params["w"] + params["b"]
+    return (jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32).mean()
+
+
+init = {"w": jnp.zeros((16, 4)), "b": jnp.zeros((4,))}
+
+# --- run MLL-SGD (Algorithm 1) and the Distributed SGD baseline ----------
+res = simulate(loss_fn, acc_fn, init, data.worker_data(), data.full,
+               data.test, net, sched, steps=512,
+               cfg=SimConfig(eta=0.1, batch_size=16))
+net_d, sched_d = baselines.distributed_sgd(net.num_workers)
+res_d = simulate(loss_fn, acc_fn, init, data.worker_data(), data.full,
+                 data.test, net_d, sched_d, steps=512,
+                 cfg=SimConfig(eta=0.1, batch_size=16))
+
+print(f"{'step':>6s} {'MLL loss':>9s} {'Dist loss':>9s}")
+for s, l1, l2 in zip(res.steps, res.train_loss, res_d.train_loss):
+    print(f"{s:6d} {l1:9.4f} {l2:9.4f}")
+print(f"final accuracy: MLL={res.test_acc[-1]:.3f} "
+      f"Dist={res_d.test_acc[-1]:.3f}")
+print("MLL-SGD reaches Distributed-SGD-level accuracy while averaging over "
+      f"the hub network only every {sched.hub_period} ticks.")

@@ -1,0 +1,34 @@
+"""Serving example: train a tiny model with MLL-SGD, merge to the weighted
+average u_k (hubs are stateless — u_k is what a deployment serves), then run
+batched greedy generation through the sharded-decode code path.
+
+  PYTHONPATH=src python examples/serve_demo.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_smoke_config
+from repro.core.mllsgd import MLLConfig
+from repro.launch.train import TrainLoopConfig, run_training
+from repro.serve.serve_step import generate
+
+cfg = dataclasses.replace(get_smoke_config("qwen2-0.5b"),
+                          param_dtype="float32", compute_dtype="float32")
+mll = MLLConfig(tau=4, q=2, eta=0.1, hub_topology="complete")
+loop = TrainLoopConfig(steps=32, eval_every=8, seq_len=48,
+                       batch_per_worker=4, tokens_per_worker=8192)
+print("training a reduced qwen2-0.5b with MLL-SGD (2 subnets x 2 workers)...")
+out = run_training(cfg, mll, loop, num_subnets=2, workers_per_subnet=2)
+
+u = out["avg_params"]                     # the merged model u_k = X_k a
+prompts = jnp.asarray([[11, 42, 7, 99, 3],
+                       [250, 250, 250, 250, 250]], jnp.int32)
+print("generating 12 tokens for a batch of 2 prompts (greedy)...")
+tokens = generate(u, prompts, cfg, max_new=12)
+for i, row in enumerate(tokens):
+    print(f"  seq {i}: {list(map(int, row))}")
+t2 = generate(u, prompts, cfg, max_new=12)
+assert (tokens == t2).all(), "greedy decoding must be deterministic"
+print("decode path OK (rotating KV cache, batched, deterministic).")

@@ -1,0 +1,4 @@
+from repro.configs.base import ArchConfig
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
+
+__all__ = ["ArchConfig", "ARCH_IDS", "get_config", "get_smoke_config"]

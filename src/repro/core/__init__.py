@@ -1,0 +1,27 @@
+"""MLL-SGD core: the paper's contribution as a composable JAX module."""
+from repro.core.topology import HubNetwork, diffusion_matrix, zeta, gamma, adjacency
+from repro.core.hierarchy import MultiLevelNetwork, MLLSchedule
+from repro.core.simulator import (SimConfig, SimResult, simulate, replicate,
+                                  weighted_average, apply_operator,
+                                  barrier_round_slots, mll_round_slots)
+from repro.core.mllsgd import (MLLConfig, MLLState, build_network, build_state,
+                               mll_train_step, apply_schedule, phase_of,
+                               gate_sample, gated_sgd_update,
+                               hub_average_ppermute, hub_average_int8,
+                               hub_average_int8_ef, init_error_feedback)
+from repro.core.outer import (OuterConfig, init_outer_state, outer_hub_step,
+                              mll_outer_train_step)
+from repro.core import baselines
+
+__all__ = [
+    "HubNetwork", "diffusion_matrix", "zeta", "gamma", "adjacency",
+    "MultiLevelNetwork", "MLLSchedule",
+    "SimConfig", "SimResult", "simulate", "replicate", "weighted_average",
+    "apply_operator", "barrier_round_slots", "mll_round_slots",
+    "MLLConfig", "MLLState", "build_network", "build_state", "mll_train_step",
+    "apply_schedule", "phase_of", "gate_sample", "gated_sgd_update",
+    "hub_average_ppermute", "hub_average_int8",
+    "hub_average_int8_ef", "init_error_feedback",
+    "OuterConfig", "init_outer_state", "outer_hub_step", "mll_outer_train_step",
+    "baselines",
+]

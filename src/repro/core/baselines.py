@@ -1,0 +1,43 @@
+"""Paper baselines expressed as MLL-SGD configurations (Section 6).
+
+Distributed SGD : one hub, q = tau = 1, a_i = 1/N, p_i = 1
+Local SGD       : fully-connected hub graph treated as one subnet,
+                  q = 1, p_i = 1, averaging every tau
+HL-SGD          : hub-and-spoke hub network (star), homogeneous workers,
+                  q > 1 allowed; workers synchronous (p_i = 1)
+MLL-SGD         : the general algorithm
+
+Every baseline therefore runs through *the same code path* (Algorithm 1); the
+functions below just build the corresponding MultiLevelNetwork / schedule so
+benchmarks and tests cannot drift from the paper's definitions.
+"""
+from __future__ import annotations
+
+from repro.core.hierarchy import MLLSchedule, MultiLevelNetwork
+
+
+def distributed_sgd(num_workers: int) -> tuple[MultiLevelNetwork, MLLSchedule]:
+    net = MultiLevelNetwork.build("complete", [num_workers])
+    return net, MLLSchedule(tau=1, q=1)
+
+
+def local_sgd(num_workers: int, tau: int = 32) -> tuple[MultiLevelNetwork, MLLSchedule]:
+    net = MultiLevelNetwork.build("complete", [num_workers])
+    return net, MLLSchedule(tau=tau, q=1)
+
+
+def hl_sgd(workers_per_subnet: list[int], tau: int = 8, q: int = 4,
+           ) -> tuple[MultiLevelNetwork, MLLSchedule]:
+    # HL-SGD: hierarchical local SGD; hub network is hub-and-spoke.  With a
+    # star hub graph (hub 0 = the global server) and homogeneous workers.
+    net = MultiLevelNetwork.build("star", workers_per_subnet)
+    return net, MLLSchedule(tau=tau, q=q)
+
+
+def mll_sgd(topology: str, workers_per_subnet: list[int], tau: int, q: int,
+            worker_rates=None, worker_weights=None, seed: int = 0,
+            ) -> tuple[MultiLevelNetwork, MLLSchedule]:
+    net = MultiLevelNetwork.build(topology, workers_per_subnet,
+                                  worker_rates=worker_rates,
+                                  worker_weights=worker_weights, seed=seed)
+    return net, MLLSchedule(tau=tau, q=q)

@@ -1,0 +1,172 @@
+"""Faithful MLL-SGD simulator: Algorithm 1 via the matrix form X' = (X - eta G) T_k.
+
+All N worker replicas are carried as a stacked leading axis on every param
+leaf; per-worker minibatch gradients are computed with `jax.vmap`, gradient
+gating theta_k^i ~ Bernoulli(p_i) follows Eq. (3), and the averaging operator
+T_k in {I, V, Z} is applied with one einsum per leaf.
+
+This module is the reference implementation used by the paper-figure
+benchmarks and by the equivalence tests against the production collective
+implementation in `mllsgd.py`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hierarchy import MLLSchedule, MultiLevelNetwork
+
+PyTree = Any
+
+
+# --------------------------------------------------------------------- params
+def replicate(params: PyTree, num_workers: int) -> PyTree:
+    """Stack identical replicas along a new leading worker axis."""
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (num_workers,) + x.shape), params)
+
+
+def weighted_average(stacked: PyTree, a: jnp.ndarray) -> PyTree:
+    """u = X a : the paper's weighted average model (Eq. 8)."""
+    return jax.tree.map(lambda x: jnp.tensordot(a, x, axes=1), stacked)
+
+
+def apply_operator(stacked: PyTree, t: jnp.ndarray) -> PyTree:
+    """X <- X T for stacked leaves (leaf[i] = column x^(i)): new[j] = sum_i T[i,j] x_i."""
+    return jax.tree.map(lambda x: jnp.einsum("ij,i...->j...", t, x), stacked)
+
+
+# ------------------------------------------------------------------ simulator
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    eta: float = 0.05
+    batch_size: int = 32
+    eval_every: int = 32          # matches the paper: metrics every 32 iterations
+
+
+@dataclasses.dataclass
+class SimResult:
+    steps: np.ndarray             # eval step indices (1-based, inclusive)
+    train_loss: np.ndarray        # F(u_k) on the full training set
+    test_acc: np.ndarray
+    final_avg_params: PyTree
+
+
+def _phase_ids(network: MultiLevelNetwork, schedule: MLLSchedule, k0: int, num: int) -> np.ndarray:
+    """Operator index (0=I, 1=V, 2=Z) for steps k0+1 .. k0+num (paper 1-based)."""
+    ids = np.zeros(num, dtype=np.int32)
+    for i in range(num):
+        k = k0 + i + 1
+        ph = schedule.phase(k)
+        ids[i] = {"local": 0, "subnet": 1, "hub": 2}[ph]
+    return ids
+
+
+def make_step_fn(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
+                 network: MultiLevelNetwork,
+                 cfg: SimConfig):
+    """Build the jitted scan body.
+
+    loss_fn(params, batch) -> scalar; batch is a pytree whose leaves have a
+    leading sample axis.  Per-worker data is a pytree with leading axes
+    (num_workers, samples_per_worker, ...).
+    """
+    n = network.num_workers
+    p_rates = jnp.asarray(network.worker_rates, dtype=jnp.float32)
+    operators = jnp.stack([
+        jnp.eye(n, dtype=jnp.float32),
+        jnp.asarray(network.v_matrix(), dtype=jnp.float32),
+        jnp.asarray(network.z_matrix(), dtype=jnp.float32),
+    ])
+    grad_fn = jax.grad(loss_fn)
+
+    @jax.jit
+    def scan_steps(stacked, key, data, op_ids):
+        def body(carry, op_id):
+            stacked, key = carry
+            key, kb, kg = jax.random.split(key, 3)
+            wkeys = jax.random.split(kb, n)
+
+            def worker_grad(wparams, wdata, wkey):
+                nsamp = jax.tree.leaves(wdata)[0].shape[0]
+                idx = jax.random.randint(wkey, (cfg.batch_size,), 0, nsamp)
+                batch = jax.tree.map(lambda x: x[idx], wdata)
+                return grad_fn(wparams, batch)
+
+            grads = jax.vmap(worker_grad)(stacked, data, wkeys)
+            theta = (jax.random.uniform(kg, (n,)) < p_rates).astype(jnp.float32)
+
+            def upd(x, g):
+                gate = theta.reshape((n,) + (1,) * (g.ndim - 1))
+                return x - cfg.eta * gate * g
+
+            stacked = jax.tree.map(upd, stacked, grads)
+            t = operators[op_id]
+            stacked = apply_operator(stacked, t)
+            return (stacked, key), None
+
+        (stacked, key), _ = jax.lax.scan(body, (stacked, key), op_ids)
+        return stacked, key
+
+    return scan_steps
+
+
+def simulate(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
+             accuracy_fn: Callable[[PyTree, PyTree], jnp.ndarray],
+             init_params: PyTree,
+             worker_data: PyTree,
+             eval_data: PyTree,
+             test_data: PyTree,
+             network: MultiLevelNetwork,
+             schedule: MLLSchedule,
+             *,
+             steps: int,
+             cfg: SimConfig = SimConfig(),
+             seed: int = 0) -> SimResult:
+    """Run MLL-SGD for `steps` iterations; evaluate u_k every cfg.eval_every."""
+    n = network.num_workers
+    a = jnp.asarray(network.a, dtype=jnp.float32)
+    stacked = replicate(init_params, n)
+    key = jax.random.PRNGKey(seed)
+    scan_steps = make_step_fn(loss_fn, network, cfg)
+
+    eval_loss = jax.jit(loss_fn)
+    eval_acc = jax.jit(accuracy_fn)
+
+    rec_steps, rec_loss, rec_acc = [], [], []
+    done = 0
+    while done < steps:
+        chunk = min(cfg.eval_every, steps - done)
+        op_ids = jnp.asarray(_phase_ids(network, schedule, done, chunk))
+        stacked, key = scan_steps(stacked, key, worker_data, op_ids)
+        done += chunk
+        u = weighted_average(stacked, a)
+        rec_steps.append(done)
+        rec_loss.append(float(eval_loss(u, eval_data)))
+        rec_acc.append(float(eval_acc(u, test_data)))
+    u = weighted_average(stacked, a)
+    return SimResult(np.asarray(rec_steps), np.asarray(rec_loss),
+                     np.asarray(rec_acc), u)
+
+
+# ------------------------------------------------- time-slot race (Fig. 6/10)
+def barrier_round_slots(rng: np.random.Generator, rates: np.ndarray, tau: int,
+                        rounds: int) -> np.ndarray:
+    """Slots consumed per synchronous round when every worker must take tau
+    gradient steps (Local SGD / HL-SGD semantics): per worker the slot count is
+    a negative-binomial(tau, p_i) sample; the round costs the max over workers.
+    """
+    out = np.empty(rounds, dtype=np.int64)
+    for r in range(rounds):
+        # number of Bernoulli(p) trials until tau successes
+        trials = rng.negative_binomial(tau, rates) + tau
+        out[r] = trials.max()
+    return out
+
+
+def mll_round_slots(tau: int, rounds: int) -> np.ndarray:
+    """MLL-SGD rounds always cost exactly tau slots (no stragglers)."""
+    return np.full(rounds, tau, dtype=np.int64)

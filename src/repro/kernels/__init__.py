@@ -1,0 +1,8 @@
+"""Pallas TPU kernels: flash attention + fused hierarchical mixing.
+
+Each kernel ships a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py;
+tests sweep shapes/dtypes and assert allclose in interpret mode.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

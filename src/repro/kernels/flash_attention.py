@@ -1,0 +1,139 @@
+"""Blocked flash attention (Pallas, TPU target).
+
+Tiling: grid = (batch, q_heads, T/block_q, S/block_kv); the kv axis is the
+minormost ("arbitrary") grid dimension, accumulating the online softmax in
+VMEM scratch (running max m, normalizer l, weighted output acc) and writing
+the tile out on the last kv step.  Block shapes are MXU/VPU aligned:
+block_q x block_kv defaults to 128 x 128, head_dim padded to a multiple of
+128 by the wrapper if needed (all assigned archs have head_dim in
+{64, 80, 128}; 64/80 still map onto the MXU, just at lower utilisation —
+recorded in the roofline notes).
+
+VMEM budget per program instance (bf16 inputs, f32 scratch):
+  q tile 128x128x2 = 32 KiB, k/v tiles 2x32 KiB, acc/m/l f32 = 64+1 KiB
+  -> well under the ~16 MiB v5e VMEM ceiling; block sizes are tunable.
+
+GQA: the q-head grid index h maps to kv head h // (H // Hkv) in the k/v index
+maps.  Causal and sliding-window masking are applied per-tile from absolute
+q/kv positions; fully-masked tiles short-circuit via `pl.when` (the causal
+upper triangle and windows far in the past skip their matmuls entirely).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: int, softcap: float,
+            block_q: int, block_kv: int, kv_len: int):
+    qb = pl.program_id(2)
+    kb = pl.program_id(3)
+    nkv = pl.num_programs(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qb * block_q
+    k_start = kb * block_kv
+
+    # tile-level reachability (skip fully-masked tiles entirely)
+    live = jnp.bool_(True)
+    if causal:
+        live &= k_start <= q_start + block_q - 1          # below/at diagonal
+    if window > 0:
+        live &= k_start + block_kv - 1 >= q_start - window + 1  # inside window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32) * scale      # (bq, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)              # (bkv, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bkv)
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+        mask = kpos < kv_len
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]                                   # (bq,)
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # guard: rows with no live keys yet keep NEG_INF max
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_ref[:, 0] + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[:, 0] = m_new
+        l_ref[:, 0] = l_new
+
+    @pl.when(kb == nkv - 1)
+    def _finalize():
+        l = l_ref[:, 0]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, :, 0, :] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, window: int = 0,
+                        softcap: float = 0.0, block_q: int = 128,
+                        block_kv: int = 128, interpret: bool = False
+                        ) -> jnp.ndarray:
+    """q: (B, T, H, hd), k/v: (B, S, Hkv, hd) -> (B, T, H, hd)."""
+    b, t, h, hd = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    group = h // hkv
+    block_q = min(block_q, t)
+    block_kv = min(block_kv, s)
+    t_pad = -t % block_q
+    s_pad = -s % block_kv
+    if t_pad:
+        q = jnp.pad(q, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+    if s_pad:
+        k = jnp.pad(k, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+    tp, sp = t + t_pad, s + s_pad
+
+    grid = (b, h, tp // block_q, sp // block_kv)
+    kernel = functools.partial(
+        _kernel, scale=1.0 / np.sqrt(hd), causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_kv=block_kv, kv_len=s)
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd), lambda b_, h_, qb, kb: (b_, qb, h_, 0)),
+            pl.BlockSpec((1, block_kv, 1, hd), lambda b_, h_, qb, kb: (b_, kb, h_ // group, 0)),
+            pl.BlockSpec((1, block_kv, 1, hd), lambda b_, h_, qb, kb: (b_, kb, h_ // group, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd), lambda b_, h_, qb, kb: (b_, qb, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, tp, h, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),   # acc
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),    # normalizer l
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :t]

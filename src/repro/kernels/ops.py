@@ -1,0 +1,71 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+`flash_attention` is differentiable: the Pallas kernel computes the forward
+pass; the backward pass falls back to the XLA reference VJP (a TPU backward
+flash kernel is listed as future work in DESIGN.md §9 — training defaults to
+impl="xla" so the dry-run HLO and gradients stay fully native either way).
+
+On non-TPU backends the wrappers run the kernels in interpret mode so the
+whole test suite exercises the real kernel bodies on CPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as ref_mod
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.hier_mix import hier_mix_chunks, hier_mix_tree
+from repro.kernels.slstm_scan import slstm_scan as _slstm_scan_kernel
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ------------------------------------------------------------ flash attention
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0):
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               softcap=softcap, interpret=_interpret_default())
+
+
+def _fa_fwd(q, k, v, causal, window, softcap):
+    out = flash_attention(q, k, v, causal, window, softcap)
+    return out, (q, k, v)
+
+
+def _fa_bwd(causal, window, softcap, res, dout):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: ref_mod.flash_attention_ref(
+        q_, k_, v_, causal=causal, window=window, softcap=softcap), q, k, v)
+    return vjp(dout)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+# ------------------------------------------------------------------ hier mix
+def hier_mix(x, g, t_op, theta, eta: float, *, block_c: int = 512):
+    """Fused gated-SGD + averaging for one (W, C) leaf."""
+    return hier_mix_chunks(x, g, t_op, theta, eta, block_c=block_c,
+                           interpret=_interpret_default())
+
+
+def hier_mix_pytree(stacked_params, stacked_grads, t_op, theta, eta: float, *,
+                    block_c: int = 512):
+    """Fused gated-SGD + averaging over a whole stacked parameter pytree."""
+    return hier_mix_tree(stacked_params, stacked_grads, t_op, theta, eta,
+                         block_c=block_c, interpret=_interpret_default())
+
+
+# ------------------------------------------------------------- slstm scan
+def slstm_scan(zx, r_gates, b_gates, *, block_b: int = 8, chunk: int = 128):
+    """Fused sLSTM recurrence (forward; the backward pass falls back to the
+    XLA scan path in xlstm.slstm_train — use impl="xla" for training until
+    a backward kernel lands; serving/prefill benefit immediately)."""
+    return _slstm_scan_kernel(zx, r_gates, b_gates, block_b=block_b,
+                              chunk=chunk, interpret=_interpret_default())

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, window: int = 0,
+                        softcap: float = 0.0) -> jnp.ndarray:
+    """q: (B, T, H, hd); k/v: (B, S, Hkv, hd) with H % Hkv == 0.
+    Returns (B, T, H, hd).  float32 softmax, same numerics contract as the
+    kernel."""
+    b, t, h, hd = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    group = h // hkv
+    qg = q.reshape(b, t, hkv, group, hd)
+    logits = jnp.einsum("bthgk,bshk->bhgts", qg, k).astype(jnp.float32)
+    logits = logits / np.sqrt(hd)
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(t)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgts,bshk->bthgk", probs.astype(v.dtype), v)
+    return out.reshape(b, t, h, hd)
+
+
+def hier_mix_ref(x: jnp.ndarray, g: jnp.ndarray, t_op: jnp.ndarray,
+                 theta: jnp.ndarray, eta: float) -> jnp.ndarray:
+    """Fused gated-SGD + averaging operator (paper Eq. 5, one leaf):
+       out[j] = sum_i T[i, j] * (x[i] - eta * theta[i] * g[i])
+    x, g: (W, C); t_op: (W, W); theta: (W,)."""
+    u = x - eta * theta[:, None].astype(x.dtype) * g
+    return jnp.einsum("ij,ic->jc", t_op.astype(x.dtype), u)
+
+
+def slstm_scan_ref(zx, r_gates, b_gates):
+    """Per-head sLSTM recurrence oracle.  zx: (B, T, H, 4*hd) gate
+    pre-activations laid out [i|f|z|o] per head; r_gates: (H, hd, 4*hd);
+    b_gates: (H, 4*hd) -> h: (B, T, H, hd)."""
+    b, t, h, hd4 = zx.shape
+    hd = hd4 // 4
+    zf32 = zx.astype(jnp.float32)
+
+    def step(state, z_t):
+        hh, c, n, m = state
+        rec = jnp.einsum("bhk,hkg->bhg", hh, r_gates.astype(jnp.float32))
+        z = z_t + rec + b_gates.astype(jnp.float32)
+        zi, zf, zz, zo = (z[..., :hd], z[..., hd:2 * hd],
+                          z[..., 2 * hd:3 * hd], z[..., 3 * hd:])
+        logf = jax.nn.log_sigmoid(zf)
+        m_new = jnp.maximum(logf + m, zi)
+        i_t = jnp.exp(zi - m_new)
+        f_t = jnp.exp(logf + m - m_new)
+        c_new = f_t * c + i_t * jnp.tanh(zz)
+        n_new = f_t * n + i_t
+        h_new = jax.nn.sigmoid(zo) * c_new / jnp.maximum(n_new, 1e-6)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    z0 = jnp.zeros((b, h, hd), jnp.float32)
+    state0 = (z0, z0, jnp.ones_like(z0), jnp.zeros_like(z0))
+    _, hs = jax.lax.scan(step, state0, jnp.moveaxis(zf32, 1, 0))
+    return jnp.moveaxis(hs, 0, 1).astype(zx.dtype)

@@ -1,0 +1,5 @@
+"""Launchers: mesh construction, sharding plans, dry-run, training driver.
+
+NOTE: importing this package must not initialise jax devices; dryrun.py sets
+XLA_FLAGS before any jax import and must stay a standalone entry point.
+"""

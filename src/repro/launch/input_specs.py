@@ -1,0 +1,129 @@
+"""ShapeDtypeStruct stand-ins for every (architecture x input-shape) combo.
+
+The four assigned input shapes:
+
+  train_4k     seq_len=4,096    global_batch=256   (training)
+  prefill_32k  seq_len=32,768   global_batch=32    (inference-prefill)
+  decode_32k   seq_len=32,768   global_batch=128   (inference-decode)
+  long_500k    seq_len=524,288  global_batch=1     (long-context-decode)
+
+Decode shapes lower ``serve_step`` — ONE new token against a KV cache (or
+SSM/xLSTM recurrent state) of ``seq_len``.  ``long_500k`` requires
+sub-quadratic attention: attention architectures switch to the
+sliding-window variant (window=4096, a first-class ArchConfig field backed
+by the rotating-buffer cache), so **no architecture skips long_500k** —
+SSM/hybrid archs run natively on O(1) state.
+
+Modality stubs (the one sanctioned carve-out): audio archs receive
+precomputed frame embeddings ``(B, S, d_model)``; VLM archs receive
+``num_patches`` patch embeddings prepended to ``seq - num_patches`` text
+tokens, plus the 3-stream M-RoPE position tensor.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import rope as rope_mod
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+LONG_CONTEXT_WINDOW = 4_096
+
+
+def adapt_config(cfg: ArchConfig, shape: ShapeSpec) -> ArchConfig:
+    """Per-shape config adaptation: long_500k forces the sub-quadratic
+    sliding-window attention variant on full-attention architectures
+    (SSM/xLSTM layers are already O(1)-state and unchanged)."""
+    if (shape.name == "long_500k" and cfg.has_attention
+            and cfg.sliding_window == 0):
+        cfg = dataclasses.replace(cfg, sliding_window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def _mrope_positions(cfg: ArchConfig, batch: int, seq: int) -> SDS:
+    ns = max(rope_mod.num_streams(cfg), 1)
+    return SDS((ns, batch, seq), jnp.int32)
+
+
+def _fwd_batch_specs(cfg: ArchConfig, batch: int, seq: int,
+                     *, with_labels: bool) -> dict:
+    """Forward-pass inputs for one replica (no worker axis)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    out: dict = {}
+    if cfg.input_mode == "tokens":
+        out["tokens"] = SDS((batch, seq), jnp.int32)
+        text_len = seq
+    elif cfg.input_mode == "embeds":
+        out["frame_embeds"] = SDS((batch, seq, cfg.d_model), cdt)
+        text_len = seq
+    elif cfg.input_mode == "tokens+patches":
+        p = min(cfg.num_patches, seq // 2)
+        text_len = seq - p
+        out["tokens"] = SDS((batch, text_len), jnp.int32)
+        out["patch_embeds"] = SDS((batch, p, cfg.d_model), cdt)
+        out["positions"] = _mrope_positions(cfg, batch, seq)
+    else:
+        raise ValueError(cfg.input_mode)
+    if with_labels:
+        out["labels"] = SDS((batch, text_len), jnp.int32)
+    return out
+
+
+def train_input_specs(cfg: ArchConfig, shape: ShapeSpec,
+                      num_workers: int) -> dict:
+    """Per-worker training batch: every leaf gains a leading worker axis;
+    the global batch splits evenly across workers."""
+    if shape.global_batch % num_workers:
+        raise ValueError(f"global_batch {shape.global_batch} not divisible "
+                         f"by {num_workers} workers")
+    per = shape.global_batch // num_workers
+    one = _fwd_batch_specs(cfg, per, shape.seq_len, with_labels=True)
+    return {k: SDS((num_workers,) + v.shape, v.dtype) for k, v in one.items()}
+
+
+def prefill_input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    return _fwd_batch_specs(cfg, shape.global_batch, shape.seq_len,
+                            with_labels=False)
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """One-token decode inputs (the KV/SSM state specs come from
+    eval_shape of init_decode_state, handled in dryrun.py)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    b = shape.global_batch
+    if cfg.input_mode == "embeds":
+        tok = {"frame_embeds": SDS((b, 1, cfg.d_model), cdt)}
+    else:
+        tok = {"tokens": SDS((b, 1), jnp.int32)}
+    return {"batch": tok, "cur": SDS((), jnp.int32)}
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, *,
+                num_workers: int = 1) -> dict:
+    """Unified entry point, dispatching on the shape's kind."""
+    cfg = adapt_config(cfg, shape)
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape, num_workers)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    return decode_input_specs(cfg, shape)

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Single pod : (data=16, model=16)          = 256 chips (TPU v5e-256 class)
+Multi-pod  : (pod=2, data=16, model=16)   = 512 chips, pod axis over DCN
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.experimental import mesh_utils
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, found {len(devices)} - the "
+            "dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count"
+            "=512 before importing jax")
+    dev_mesh = mesh_utils.create_device_mesh(shape, devices[:n])
+    return Mesh(dev_mesh, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def mesh_axis_sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

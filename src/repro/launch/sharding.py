@@ -1,0 +1,240 @@
+"""Per-architecture sharding rules.
+
+Two layers of rules, both derived from the mesh + ArchConfig:
+
+1. *Parameter specs* — a PartitionSpec per parameter leaf, matched on the
+   leaf's path name (wq/wk/wv/wo, w_gate/w_up/w_down, table/lm_head, router,
+   mamba and xlstm projections, norms).  Dims shard only when divisible by
+   the mesh axis size; everything else replicates.
+
+2. *Logical activation rules* — the mapping installed via
+   models.pjit_utils.logical_sharding that resolves the model's logical
+   activation names ("heads", "mlp", "vocab", "experts", ...) to mesh axes.
+
+Hierarchy placement (DESIGN.md §4):
+  worker_per_data : worker axis -> ("pod","data"); inner dims -> "model"
+  worker_per_pod  : worker axis -> ("pod",); inner dims -> "model" and the
+                    d_model-sized dim additionally -> "data"  (FSDP/ZeRO-3)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+PyTree = Any
+
+# archs whose replica does not fit 16 chips -> DiLoCo-style worker per pod
+BIG_ARCHS = ("grok-1-314b", "qwen2-vl-72b", "qwen3-moe-235b-a22b",
+             "jamba-v0.1-52b")
+
+
+def granularity_for(cfg: ArchConfig) -> str:
+    return "worker_per_pod" if cfg.name in BIG_ARCHS else "worker_per_data"
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    mesh: Mesh
+    cfg: ArchConfig
+    granularity: str              # worker_per_data | worker_per_pod
+    fsdp: bool                    # shard d_model-sized param dims over "data"
+
+    @property
+    def axis_sizes(self) -> dict[str, int]:
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+
+    @property
+    def model_size(self) -> int:
+        return self.axis_sizes.get("model", 1)
+
+    @property
+    def data_size(self) -> int:
+        return self.axis_sizes.get("data", 1)
+
+    @property
+    def n_pods(self) -> int:
+        return self.axis_sizes.get("pod", 1)
+
+    @property
+    def worker_axes(self) -> tuple[str, ...]:
+        if self.granularity == "worker_per_chip":
+            return tuple(a for a in ("pod", "data", "model")
+                         if a in self.axis_sizes)
+        if self.granularity == "worker_per_data":
+            return tuple(a for a in ("pod", "data") if a in self.axis_sizes)
+        return tuple(a for a in ("pod",) if a in self.axis_sizes)
+
+    @property
+    def num_workers(self) -> int:
+        return int(np.prod([self.axis_sizes[a] for a in self.worker_axes], initial=1))
+
+    # ------------------------------------------------------- logical rules
+    def logical_rules(self, *, serving: bool) -> dict:
+        cfg = self.cfg
+        # worker_per_chip: each worker owns one chip — nothing inner shards
+        ms = 0 if self.granularity == "worker_per_chip" else self.model_size
+        heads = "model" if _div(cfg.n_heads, ms) else None
+        kv = "model" if _div(cfg.n_kv_heads, ms) else None
+        # decode: when kv heads don't divide the model axis the cache shards
+        # on head_dim instead — q must co-shard (else GSPMD copies the whole
+        # cache per layer, the 'involuntary full rematerialization' warning)
+        kv_hd = None
+        if serving and kv is None and _div(cfg.resolved_head_dim, ms):
+            kv_hd = "model"
+            heads = None
+        experts_sharded = cfg.n_experts > 0 and _div(cfg.n_experts, ms)
+        rules = {
+            "heads": heads,
+            "kv_heads": kv,
+            "kv_hd": kv_hd,
+            "mlp": "model" if _div(cfg.d_ff or 0, ms) else None,
+            "vocab": "model" if _div(cfg.vocab_size, ms) else None,
+            "experts": ("model" if experts_sharded and cfg.moe_groups <= 1
+                        else None),
+            "moe_ff": (None if experts_sharded and cfg.moe_groups <= 1 else
+                       ("model" if _div(cfg.resolved_moe_d_ff, ms) else None)),
+            "moe_groups": ("data" if cfg.moe_groups > 1 and
+                           _div(cfg.moe_groups, self.data_size) else None),
+            "mamba_inner": "model" if _div(cfg.ssm_expand * cfg.d_model, ms) else None,
+            "xlstm_proj": "model" if _div(int(cfg.xlstm_proj_factor * cfg.d_model), ms) else None,
+            "act_seq": None,
+            "mixer_seq": None,
+        }
+        if serving:
+            rules["act_batch"] = tuple(a for a in ("pod", "data") if a in self.axis_sizes)
+        else:
+            # training: the worker axis is threaded by vmap(spmd_axis_name=...);
+            # per-worker batch shards over "data" only in worker_per_pod mode
+            rules["act_batch"] = "data" if self.granularity == "worker_per_pod" else None
+        return rules
+
+    # ------------------------------------------------------- param specs
+    def _leaf_spec(self, path: str, shape: tuple[int, ...]) -> P:
+        cfg, ds = self.cfg, self.data_size
+        ms = 0 if self.granularity == "worker_per_chip" else self.model_size
+        fsdp = self.fsdp
+        d = cfg.d_model
+
+        def fs(dim_size: int, axis_idx: int, base: tuple) -> tuple:
+            """optionally add FSDP 'data' sharding on a d_model-sized dim"""
+            if fsdp and dim_size == d and base[axis_idx] is None and _div(dim_size, ds):
+                lst = list(base)
+                lst[axis_idx] = "data"
+                return tuple(lst)
+            return base
+
+        name = path.split("/")[-1]
+        if name in ("scale", "bias", "b_if", "b_gates", "dt_bias", "d_skip",
+                    "conv_b"):
+            return P(*([None] * len(shape)))
+        if name == "table":                            # (V, d)
+            spec = ("model" if _div(shape[0], ms) else None, None)
+            return P(*fs(shape[1], 1, spec))
+        if name == "lm_head":                          # (d, V)
+            spec = (None, "model" if _div(shape[1], ms) else None)
+            return P(*fs(shape[0], 0, spec))
+        if name in ("wq", "wk", "wv") and len(shape) == 3:   # (d, H|Hkv, hd)
+            spec = (None, "model" if _div(shape[1], ms) else None, None)
+            return P(*fs(shape[0], 0, spec))
+        if name in ("wq", "wk", "wv"):                 # xlstm (dp, dp)
+            return P(None, "model" if _div(shape[1], ms) else None)
+        if name == "wo":                               # (H, hd, d)
+            spec = ("model" if _div(shape[0], ms) else None, None, None)
+            return P(*fs(shape[2], 2, spec))
+        if name in ("bq", "bk", "bv"):                 # (H, hd)
+            return P("model" if _div(shape[0], ms) else None, None)
+        if name == "router":                           # (d, E)
+            return P(None, None)
+        if name in ("w_gate", "w_up", "w_down") and len(shape) == 3:
+            # MoE experts: (E, d, f) / (E, f, d).  With grouped dispatch the
+            # scatter must not cross a sharded E dim (§Perf HC2/transfer) —
+            # prefer f-sharding whenever groups are active.
+            e = shape[0]
+            f_idx = 2 if name in ("w_gate", "w_up") else 1
+            prefer_f = cfg.moe_groups > 1 and _div(shape[f_idx], ms)
+            if _div(e, ms) and not prefer_f:
+                spec = ("model", None, None)
+            else:
+                spec = [None, None, None]
+                if _div(shape[f_idx], ms):
+                    spec[f_idx] = "model"
+                spec = tuple(spec)
+            d_idx = 1 if name in ("w_gate", "w_up") else 2
+            return P(*fs(shape[d_idx], d_idx, spec))
+        if name in ("w_gate", "w_up"):                 # dense MLP (d, f)
+            spec = (None, "model" if _div(shape[1], ms) else None)
+            return P(*fs(shape[0], 0, spec))
+        if name == "w_down":                           # (f, d)
+            spec = ("model" if _div(shape[0], ms) else None, None)
+            return P(*fs(shape[1], 1, spec))
+        # ---- mamba
+        if name == "in_proj":                          # (d, 2*di)
+            spec = (None, "model" if _div(shape[1], ms) else None)
+            return P(*fs(shape[0], 0, spec))
+        if name == "conv_w":                           # (K, di)
+            return P(None, "model" if _div(shape[1], ms) else None)
+        if name == "x_proj":                           # (di, dtr + 2n)
+            return P("model" if _div(shape[0], ms) else None, None)
+        if name == "dt_proj":                          # (dtr, di)
+            return P(None, "model" if _div(shape[1], ms) else None)
+        if name == "a_log":                            # (di, n)
+            return P("model" if _div(shape[0], ms) else None, None)
+        if name == "out_proj":                         # (di, d)
+            spec = ("model" if _div(shape[0], ms) else None, None)
+            return P(*fs(shape[1], 1, spec))
+        # ---- xlstm
+        if name == "w_up":                             # (d, dp) — handled above
+            pass
+        if name in ("wq2", "wk2", "wv2"):
+            return P(None, "model" if _div(shape[1], ms) else None)
+        if name == "w_if":                             # (dp, 2h)
+            return P("model" if _div(shape[0], ms) else None, None)
+        if name == "w_gates":                          # (dp, 4dp)
+            return P(None, "model" if _div(shape[1], ms) else None)
+        if name == "r_gates":                          # (h, hd, 4hd)
+            return P(None, None, None)
+        # default: replicate
+        return P(*([None] * len(shape)))
+
+    def param_specs(self, params_shape: PyTree, *, with_worker_axis: bool) -> PyTree:
+        """PartitionSpec tree matching `params_shape` (ShapeDtypeStructs).
+        When with_worker_axis, leaves carry a leading worker dim that shards
+        over self.worker_axes."""
+        waxes = self.worker_axes
+
+        def one(path, leaf):
+            pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                            for p in path)
+            shape = leaf.shape
+            prefix = []
+            if with_worker_axis:
+                prefix.append(waxes if waxes else None)
+                shape = shape[1:]
+            if pstr.startswith("blocks"):
+                prefix.append(None)          # the scanned super-block dim
+                shape = shape[1:]
+            inner = self._leaf_spec(pstr, shape)
+            return P(*prefix, *inner)
+
+        return jax.tree_util.tree_map_with_path(one, params_shape)
+
+    def named(self, spec_tree: PyTree) -> PyTree:
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), spec_tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+
+def make_plan(mesh: Mesh, cfg: ArchConfig, *,
+              granularity: str | None = None) -> ShardingPlan:
+    g = granularity or granularity_for(cfg)
+    return ShardingPlan(mesh=mesh, cfg=cfg, granularity=g,
+                        fsdp=(g == "worker_per_pod"))

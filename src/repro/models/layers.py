@@ -1,0 +1,97 @@
+"""Shared neural-net layers (pure JAX, functional params-as-pytrees)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.pjit_utils import constraint
+
+PyTree = Any
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+def trunc_normal(key, shape, scale: float, dtype) -> jnp.ndarray:
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+# ------------------------------------------------------------------ norms
+def init_norm(cfg: ArchConfig, d: int | None = None) -> PyTree:
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), _dtype(cfg.param_dtype))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), _dtype(cfg.param_dtype))
+    return p
+
+
+def norm_apply(params: PyTree, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = (xf ** 2).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * params["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- MLP
+def init_mlp(key, cfg: ArchConfig, d_ff: int | None = None) -> PyTree:
+    d, dtype = cfg.d_model, _dtype(cfg.param_dtype)
+    f = d_ff or cfg.d_ff
+    scale = 1.0 / np.sqrt(d)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_down": trunc_normal(k2, (f, d), 1.0 / np.sqrt(f), dtype)}
+    if cfg.activation in ("swiglu", "geglu"):
+        p["w_gate"] = trunc_normal(k1, (d, f), scale, dtype)
+        p["w_up"] = trunc_normal(k3, (d, f), scale, dtype)
+    else:
+        p["w_up"] = trunc_normal(k1, (d, f), scale, dtype)
+    return p
+
+
+def mlp_apply(params: PyTree, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    cdt = _dtype(cfg.compute_dtype)
+    x = x.astype(cdt)
+    if cfg.activation in ("swiglu", "geglu"):
+        gate = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(cdt))
+        up = jnp.einsum("...d,df->...f", x, params["w_up"].astype(cdt))
+        act = jax.nn.silu(gate) if cfg.activation == "swiglu" else jax.nn.gelu(gate)
+        h = act * up
+    else:
+        h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, params["w_up"].astype(cdt)))
+    h = constraint(h, *([None] * (h.ndim - 1)), "mlp")
+    return jnp.einsum("...f,fd->...d", h, params["w_down"].astype(cdt))
+
+
+# ------------------------------------------------------------- embeddings
+def init_embedding(key, cfg: ArchConfig) -> PyTree:
+    dtype = _dtype(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    p = {"table": trunc_normal(k1, (cfg.vocab_size, cfg.d_model), 1.0, dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = trunc_normal(k2, (cfg.d_model, cfg.vocab_size),
+                                    1.0 / np.sqrt(cfg.d_model), dtype)
+    return p
+
+
+def embed_tokens(params: PyTree, tokens: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    cdt = _dtype(cfg.compute_dtype)
+    x = jnp.take(params["table"].astype(cdt), tokens, axis=0)
+    return constraint(x, "act_batch", "act_seq", None)
+
+
+def lm_logits(params: PyTree, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    cdt = _dtype(cfg.compute_dtype)
+    head = (params["table"].T if cfg.tie_embeddings else params["lm_head"]).astype(cdt)
+    logits = jnp.einsum("...d,dv->...v", x.astype(cdt), head)
+    return constraint(logits, *([None] * (logits.ndim - 1)), "vocab")

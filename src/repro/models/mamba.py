@@ -1,0 +1,166 @@
+"""Mamba (S6 selective state space) block — used by Jamba's SSM layers.
+
+Training/prefill runs the selective scan as a *chunked* associative scan:
+the sequence is split into chunks scanned with `jax.lax.scan` (carried
+hidden state) while each chunk runs `jax.lax.associative_scan` internally —
+bounding the materialised (B, chunk, d_inner, N) tensors instead of the full
+(B, S, d_inner, N).  Decode runs the one-step recurrence on an explicit
+(B, d_inner, N) state + (B, K-1, d_inner) conv tail.
+
+TPU adaptation: d_inner is elementwise through the recurrence, so it shards
+cleanly over the "model" mesh axis (logical name "mamba_inner"); the scan
+itself stays local to each chip — no collectives on the recurrent path.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import trunc_normal
+from repro.models.pjit_utils import constraint
+
+PyTree = Any
+CHUNK = 256
+
+
+def _dims(cfg: ArchConfig) -> tuple[int, int, int, int]:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state_dim
+    dt_rank = max(1, int(np.ceil(d / 16)))
+    return d, di, n, dt_rank
+
+
+def init_mamba(key, cfg: ArchConfig) -> PyTree:
+    d, di, n, dt_rank = _dims(cfg)
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    scale = 1.0 / np.sqrt(d)
+    # S4D-real initialisation of A
+    a_log = jnp.log(jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n)))
+    dt_bias = jnp.log(jnp.expm1(jnp.exp(jax.random.uniform(
+        ks[5], (di,), jnp.float32,
+        np.log(1e-3), np.log(1e-1)))))  # softplus^-1(dt) with dt in [1e-3, 1e-1]
+    return {
+        "in_proj": trunc_normal(ks[0], (d, 2 * di), scale, dtype),
+        "conv_w": trunc_normal(ks[1], (cfg.ssm_conv_dim, di), 1.0 / np.sqrt(cfg.ssm_conv_dim), dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": trunc_normal(ks[2], (di, dt_rank + 2 * n), 1.0 / np.sqrt(di), dtype),
+        "dt_proj": trunc_normal(ks[3], (dt_rank, di), 1.0 / np.sqrt(dt_rank), dtype),
+        "dt_bias": dt_bias,
+        "a_log": a_log,
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": trunc_normal(ks[4], (di, d), 1.0 / np.sqrt(di), dtype),
+    }
+
+
+def _ssm_inputs(params: PyTree, u: jnp.ndarray, cfg: ArchConfig):
+    """u: (B, L, di) post-conv activations -> dt, A, B, C tensors."""
+    _, di, n, dt_rank = _dims(cfg)
+    cdt = u.dtype
+    proj = jnp.einsum("bld,de->ble", u, params["x_proj"].astype(cdt))
+    dt_x, b_mat, c_mat = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("blr,rd->bld", dt_x, params["dt_proj"].astype(cdt)).astype(jnp.float32)
+        + params["dt_bias"])                                   # (B, L, di) f32
+    a = -jnp.exp(params["a_log"])                              # (di, N) f32
+    return dt, a, b_mat.astype(jnp.float32), c_mat.astype(jnp.float32)
+
+
+def _causal_conv_train(params: PyTree, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """Depthwise causal conv over seq. x: (B, L, di)."""
+    k = cfg.ssm_conv_dim
+    w = params["conv_w"].astype(x.dtype)                       # (K, di)
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu(out + params["conv_b"].astype(x.dtype))
+
+
+def _selective_scan_chunked(dt, a, b_mat, c_mat, u):
+    """h_t = exp(dt_t A) h_{t-1} + dt_t B_t u_t ;  y_t = C_t . h_t
+    dt: (B,L,di) f32, a: (di,N), b/c: (B,L,N), u: (B,L,di).
+    Returns y: (B,L,di) f32.  Chunked over L to bound memory."""
+    bsz, l, di = u.shape
+    n = a.shape[1]
+    nchunks = max(1, l // CHUNK)
+    csize = l // nchunks if l % nchunks == 0 else l
+    if l % csize != 0:
+        csize, nchunks = l, 1
+
+    def chunk_body(h0, args):
+        dt_c, b_c, c_c, u_c = args                              # (B, csize, ...)
+        decay = jnp.exp(dt_c[..., None] * a)                    # (B,c,di,N)
+        drive = (dt_c * u_c.astype(jnp.float32))[..., None] * b_c[:, :, None, :]
+
+        def combine(x, y):
+            a1, b1 = x
+            a2, b2 = y
+            return a1 * a2, a2 * b1 + b2
+
+        # prepend carried state as step 0 drive
+        decay_full = jnp.concatenate(
+            [jnp.ones_like(decay[:, :1]), decay], axis=1)
+        drive_full = jnp.concatenate([h0[:, None], drive], axis=1)
+        _, hs = jax.lax.associative_scan(combine, (decay_full, drive_full), axis=1)
+        h_last = hs[:, -1]
+        y_c = jnp.einsum("bcdn,bcn->bcd", hs[:, 1:], c_c)
+        return h_last, y_c
+
+    h0 = jnp.zeros((bsz, di, n), jnp.float32)
+    resh = lambda z: z.reshape((bsz, nchunks, csize) + z.shape[2:]).swapaxes(0, 1)
+    _, ys = jax.lax.scan(chunk_body, h0,
+                         (resh(dt), resh(b_mat), resh(c_mat), resh(u)))
+    return ys.swapaxes(0, 1).reshape(bsz, l, di)
+
+
+def mamba_train(params: PyTree, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """x: (B, L, d) -> (B, L, d)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    _, di, _, _ = _dims(cfg)
+    xz = jnp.einsum("bld,de->ble", x.astype(cdt), params["in_proj"].astype(cdt))
+    xz = constraint(xz, "act_batch", "mixer_seq", "mamba_inner")
+    u, z = jnp.split(xz, 2, axis=-1)
+    u = _causal_conv_train(params, u, cfg)
+    dt, a, b_mat, c_mat = _ssm_inputs(params, u, cfg)
+    y = _selective_scan_chunked(dt, a, b_mat, c_mat, u)
+    y = y + params["d_skip"] * u.astype(jnp.float32)
+    y = (y.astype(cdt)) * jax.nn.silu(z)
+    y = constraint(y, "act_batch", "mixer_seq", "mamba_inner")
+    return jnp.einsum("ble,ed->bld", y, params["out_proj"].astype(cdt))
+
+
+# ------------------------------------------------------------------- decode
+def init_mamba_state(cfg: ArchConfig, batch: int) -> PyTree:
+    _, di, n, _ = _dims(cfg)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    return {
+        "h": jnp.zeros((batch, di, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_dim - 1, di), cdt),
+    }
+
+
+def mamba_decode(params: PyTree, x: jnp.ndarray, cfg: ArchConfig,
+                 state: PyTree) -> tuple[jnp.ndarray, PyTree]:
+    """x: (B, 1, d); one-step recurrence."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    xz = jnp.einsum("bld,de->ble", x.astype(cdt), params["in_proj"].astype(cdt))
+    u, z = jnp.split(xz, 2, axis=-1)                            # (B,1,di)
+    # conv with cached tail
+    hist = jnp.concatenate([state["conv"], u], axis=1)          # (B,K,di)
+    w = params["conv_w"].astype(cdt)
+    u1 = jax.nn.silu(jnp.einsum("bkd,kd->bd", hist, w)
+                     + params["conv_b"].astype(cdt))[:, None]
+    new_conv = hist[:, 1:]
+    dt, a, b_mat, c_mat = _ssm_inputs(params, u1, cfg)
+    decay = jnp.exp(dt[:, 0, :, None] * a)                      # (B,di,N)
+    drive = (dt[:, 0] * u1[:, 0].astype(jnp.float32))[..., None] * b_mat[:, 0, None, :]
+    h = decay * state["h"] + drive
+    y = jnp.einsum("bdn,bn->bd", h, c_mat[:, 0])
+    y = y + params["d_skip"] * u1[:, 0].astype(jnp.float32)
+    y = (y.astype(cdt) * jax.nn.silu(z[:, 0]))[:, None]
+    out = jnp.einsum("ble,ed->bld", y, params["out_proj"].astype(cdt))
+    return out, {"h": h, "conv": new_conv}

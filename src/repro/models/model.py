@@ -1,0 +1,85 @@
+"""Top-level model: embeddings + scanned super-blocks + LM head.
+
+Input modes (per ArchConfig.input_mode):
+  tokens          : {"tokens": (B, S) int32}
+  embeds          : {"frame_embeds": (B, S, d)}            (audio stub)
+  tokens+patches  : {"tokens": (B, S_text) int32,
+                     "patch_embeds": (B, P, d)}            (vlm stub; patches
+                     are prepended, total sequence = P + S_text)
+
+The modality frontends (EnCodec conv stack, ViT) are stubs per the brief —
+`input_specs()` hands the decoder precomputed embeddings of the right shape.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import rope as rope_mod
+from repro.models import transformer as tf
+from repro.models.layers import (embed_tokens, init_embedding, init_norm,
+                                 lm_logits, norm_apply)
+from repro.models.pjit_utils import constraint
+
+PyTree = Any
+
+
+def init_model(key, cfg: ArchConfig) -> PyTree:
+    k1, k2 = jax.random.split(key)
+    return {
+        "embed": init_embedding(k1, cfg),
+        "blocks": tf.init_stacked_blocks(k2, cfg),
+        "final_norm": init_norm(cfg),
+    }
+
+
+def _input_embeds(params: PyTree, batch: dict, cfg: ArchConfig) -> jnp.ndarray:
+    if cfg.input_mode == "tokens":
+        return embed_tokens(params["embed"], batch["tokens"], cfg)
+    if cfg.input_mode == "embeds":
+        return batch["frame_embeds"].astype(jnp.dtype(cfg.compute_dtype))
+    if cfg.input_mode == "tokens+patches":
+        text = embed_tokens(params["embed"], batch["tokens"], cfg)
+        patches = batch["patch_embeds"].astype(text.dtype)
+        return jnp.concatenate([patches, text], axis=1)
+    raise ValueError(cfg.input_mode)
+
+
+def forward_train(params: PyTree, batch: dict, cfg: ArchConfig, *,
+                  impl: str = "xla", remat: str = "none"
+                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (logits (B, S_total, vocab), moe_aux_loss)."""
+    x = _input_embeds(params, batch, cfg)
+    b, s, _ = x.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = rope_mod.default_positions(cfg, b, s)
+    x = constraint(x, "act_batch", "act_seq", None)
+    x, aux = tf.stack_train(params["blocks"], x, cfg, positions,
+                            impl=impl, remat=remat)
+    x = norm_apply(params["final_norm"], x, cfg)
+    return lm_logits(params["embed"], x, cfg), aux
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int) -> PyTree:
+    return tf.init_stacked_state(cfg, batch, max_len)
+
+
+def decode_step(params: PyTree, state: PyTree, batch: dict, cur: jnp.ndarray,
+                cfg: ArchConfig) -> tuple[jnp.ndarray, PyTree]:
+    """One-token decode. batch: {"tokens": (B,1)} or {"frame_embeds": (B,1,d)}.
+    cur: scalar int32 absolute position. -> (logits (B,1,V), new state)."""
+    if "tokens" in batch:
+        x = embed_tokens(params["embed"], batch["tokens"], cfg)
+    else:
+        x = batch["frame_embeds"].astype(jnp.dtype(cfg.compute_dtype))
+    x, new_state = tf.stack_decode(params["blocks"], state, x, cfg, cur)
+    x = norm_apply(params["final_norm"], x, cfg)
+    return lm_logits(params["embed"], x, cfg), new_state
+
+
+def count_params(params: PyTree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))

@@ -1,0 +1,127 @@
+"""Top-k mixture-of-experts with capacity-based scatter dispatch.
+
+Design notes (TPU adaptation): we avoid the GShard (T, E, C) one-hot dispatch
+einsum — at the assigned scales (T = 32k tokens/device, E = 128, C ≈ 2.5k) the
+one-hot tensor alone would be ~10^10 elements.  Instead each (token, k) pair
+computes its slot inside its expert's capacity buffer with a (T*k, E) cumsum,
+scatters activations into an (E, C, d) buffer, runs dense per-expert matmuls
+(MXU-aligned einsums over the stacked expert dim), and gathers back weighted
+by the router probabilities.  Expert or FFN dim sharding is chosen per-arch
+via the logical axis rules ("experts" / "moe_ff").
+
+Router: softmax over experts in float32, top-k, renormalized combine weights
+(Qwen3/Grok convention), plus the standard load-balance auxiliary loss
+(Shazeer et al.): aux = E * sum_e f_e * P_e.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import trunc_normal
+from repro.models.pjit_utils import constraint
+
+PyTree = Any
+
+
+def init_moe(key, cfg: ArchConfig) -> PyTree:
+    d, f, e = cfg.d_model, cfg.resolved_moe_d_ff, cfg.n_experts
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / np.sqrt(d)
+    p = {
+        "router": trunc_normal(ks[0], (d, e), scale, jnp.float32),
+        "w_down": trunc_normal(ks[2], (e, f, d), 1.0 / np.sqrt(f), dtype),
+    }
+    if cfg.activation in ("swiglu", "geglu"):
+        p["w_gate"] = trunc_normal(ks[1], (e, d, f), scale, dtype)
+        p["w_up"] = trunc_normal(ks[3], (e, d, f), scale, dtype)
+    else:
+        p["w_up"] = trunc_normal(ks[1], (e, d, f), scale, dtype)
+    return p
+
+
+def capacity(cfg: ArchConfig, num_tokens: int) -> int:
+    c = int(np.ceil(num_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+    return max(cfg.top_k, min(c, num_tokens))
+
+
+def moe_apply(params: PyTree, x: jnp.ndarray, cfg: ArchConfig
+              ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (y, aux_loss).
+
+    Dispatch runs in ``cfg.moe_groups`` independent groups over the token
+    dim (logical axis "moe_groups", mapped to the mesh axis the activations'
+    batch is sharded on).  With G = 1 this is the global-capacity dispatch;
+    with G = data-shards each shard routes its own tokens with capacity
+    C/G — the scatter never crosses shards, so GSPMD keeps the (G, E, C, d)
+    buffer fully sharded instead of replicating + all-reducing it (the
+    baseline's dominant collective for the FSDP MoE archs, see
+    EXPERIMENTS.md §Perf HC2)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    g = cfg.moe_groups if cfg.moe_groups > 0 and t % cfg.moe_groups == 0 else 1
+    tg = t // g
+    cap = capacity(cfg, tg)
+    xf = x.reshape(g, tg, d).astype(cdt)
+    xf = constraint(xf, "moe_groups", None, None)
+
+    # ---- router (float32 for stability)
+    logits = jnp.einsum("gtd,de->gte", xf.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                       # (G, Tg, E)
+    top_p, top_e = jax.lax.top_k(probs, k)                        # (G, Tg, k)
+    top_p = top_p / jnp.clip(top_p.sum(-1, keepdims=True), 1e-9)  # renorm
+
+    # ---- load-balance aux loss (per group, averaged)
+    me = probs.mean(axis=1)                                       # (G, E)
+    ce = jnp.zeros((g, e), jnp.float32)
+    gidx = jnp.broadcast_to(jnp.arange(g)[:, None], (g, tg * k)).reshape(-1)
+    ce = ce.at[gidx, top_e.reshape(-1)].add(1.0) / (tg * k)
+    aux = cfg.router_aux_weight * e * jnp.sum(me * ce) / g
+
+    # ---- slot assignment: position of each (token, k) pair inside its
+    # expert's capacity buffer, computed independently per group
+    flat_e = top_e.reshape(g, tg * k)                             # (G, Tg*k)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)           # (G, Tg*k, E)
+    pos = (jnp.cumsum(onehot, axis=1) - 1)                        # running count
+    slot = jnp.take_along_axis(pos, flat_e[..., None], axis=2)[..., 0]
+    keep = slot < cap
+    slot_c = jnp.where(keep, slot, cap)                           # overflow bin
+
+    # ---- dispatch: (G, E, C+1, d) buffer; last bin collects dropped tokens
+    tok_idx = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(tg), k)[None], (g, tg * k))
+    buf = jnp.zeros((g, e, cap + 1, d), cdt)
+    gsel = jnp.broadcast_to(jnp.arange(g)[:, None], (g, tg * k))
+    buf = buf.at[gsel, flat_e, slot_c].add(
+        jnp.take_along_axis(xf, tok_idx[..., None], axis=1), mode="drop")
+    buf = buf[:, :, :cap]
+    buf = constraint(buf, "moe_groups", "experts", None, None)
+
+    # ---- expert FFN (stacked einsums -> MXU-aligned per-expert matmuls)
+    if cfg.activation in ("swiglu", "geglu"):
+        gate = jnp.einsum("gecd,edf->gecf", buf, params["w_gate"].astype(cdt))
+        up = jnp.einsum("gecd,edf->gecf", buf, params["w_up"].astype(cdt))
+        act = jax.nn.silu(gate) if cfg.activation == "swiglu" else jax.nn.gelu(gate)
+        h = act * up
+    else:
+        h = jax.nn.gelu(
+            jnp.einsum("gecd,edf->gecf", buf, params["w_up"].astype(cdt)))
+    h = constraint(h, "moe_groups", "experts", None, "moe_ff")
+    out = jnp.einsum("gecf,efd->gecd", h, params["w_down"].astype(cdt))
+    out = constraint(out, "moe_groups", "experts", None, None)
+
+    # ---- combine: gather each pair's expert output, weight, sum over k
+    pair_out = out[gsel, flat_e, slot_c.clip(0, cap - 1)]         # (G, Tg*k, d)
+    w = (top_p.reshape(g, tg * k) * keep.astype(jnp.float32)).astype(cdt)
+    y = jnp.zeros((g, tg, d), cdt).at[gsel, tok_idx].add(
+        pair_out * w[..., None])
+    y = constraint(y, "moe_groups", None, None)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,55 @@
+"""Logical-axis sharding annotations (MaxText-style).
+
+Model code annotates tensors with *logical* axis names; the launcher installs
+a mapping from logical names to mesh axes.  Outside a mesh context the
+annotations are no-ops, so the same model runs on a laptop and on a 512-chip
+mesh unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def _rules() -> dict | None:
+    return getattr(_STATE, "rules", None)
+
+
+def _mesh() -> Mesh | None:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def logical_sharding(mesh: Mesh, rules: dict[str, str | tuple[str, ...] | None]):
+    """Install `logical name -> mesh axis (or None)` rules for `constraint`."""
+    prev_rules, prev_mesh = _rules(), _mesh()
+    _STATE.rules, _STATE.mesh = dict(rules), mesh
+    try:
+        yield
+    finally:
+        _STATE.rules, _STATE.mesh = prev_rules, prev_mesh
+
+
+def spec_for(names: Sequence[str | None]) -> P:
+    """Translate logical axis names to a PartitionSpec under current rules."""
+    rules = _rules() or {}
+    parts = []
+    for n in names:
+        parts.append(None if n is None else rules.get(n))
+    return P(*parts)
+
+
+def constraint(x: jax.Array, *names: str | None) -> jax.Array:
+    """with_sharding_constraint by logical names; identity with no mesh."""
+    mesh = _mesh()
+    if mesh is None:
+        return x
+    if len(names) != x.ndim:
+        raise ValueError(f"constraint rank mismatch: {names} vs shape {x.shape}")
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec_for(names)))

@@ -1,0 +1,68 @@
+"""Rotary position embedding variants.
+
+standard : one position stream over all head_dim/2 frequency pairs
+glm2d    : ChatGLM 2D RoPE — frequency pairs split in two sections driven by
+           (position, block_position) streams [arXiv:2406.12793]; causal-LM
+           usage passes zeros for the block stream.
+mrope    : Qwen2-VL multimodal RoPE — three sections (temporal, height,
+           width) of the frequency pairs, driven by 3 position streams
+           [arXiv:2409.12191].
+
+All variants share one implementation: the head_dim/2 frequency pairs are
+partitioned into sections, and section s takes its angles from position
+stream s.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+def num_streams(cfg: ArchConfig) -> int:
+    return {"standard": 1, "glm2d": 2, "mrope": 3, "none": 0}[cfg.rope]
+
+
+def _sections(cfg: ArchConfig, half: int) -> list[int]:
+    if cfg.rope == "standard":
+        return [half]
+    if cfg.rope == "glm2d":
+        return [half - half // 2, half // 2]
+    if cfg.rope == "mrope":
+        # Qwen2-VL style: temporal section smaller than spatial ones
+        a = half // 4
+        b = (half - a) // 2
+        return [a, b, half - a - b]
+    raise ValueError(cfg.rope)
+
+
+def rope_angles(cfg: ArchConfig, positions: jnp.ndarray, head_dim: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """positions: (streams, B, S) int32 -> cos, sin of shape (B, S, head_dim/2)."""
+    half = head_dim // 2
+    inv_freq = 1.0 / (cfg.rope_theta ** (np.arange(0, half) * 2.0 / head_dim))
+    inv_freq = jnp.asarray(inv_freq, jnp.float32)
+    secs = _sections(cfg, half)
+    stream_of_freq = np.repeat(np.arange(len(secs)), secs)      # (half,)
+    pos_per_freq = positions.astype(jnp.float32)[stream_of_freq]  # (half, B, S)
+    ang = jnp.moveaxis(pos_per_freq, 0, -1) * inv_freq            # (B, S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, H, head_dim); cos/sin: (B, S, head_dim/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[:, :, None, :].astype(x.dtype)
+    s = sin[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def default_positions(cfg: ArchConfig, batch: int, seq: int,
+                      offset: jnp.ndarray | int = 0) -> jnp.ndarray:
+    """(streams, B, S) causal-LM positions; extra streams get the same
+    stream-0 positions (text-only default; VLM input_specs override)."""
+    ns = max(num_streams(cfg), 1)
+    base = jnp.arange(seq, dtype=jnp.int32)[None, :] + jnp.asarray(offset, jnp.int32)
+    base = jnp.broadcast_to(base, (batch, seq))
+    return jnp.broadcast_to(base[None], (ns, batch, seq))

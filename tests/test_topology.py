@@ -1,0 +1,100 @@
+"""Property tests for hub graphs and the generalized diffusion matrix H
+(paper Assumption 2 + the spectral facts Theorem 1 relies on)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import (HubNetwork, adjacency, diffusion_matrix,
+                                 gamma, is_connected, zeta)
+
+TOPOLOGIES = ("complete", "ring", "path", "star", "erdos")
+
+
+def _hub_weights(draw, d):
+    w = draw(st.lists(st.floats(0.1, 10.0), min_size=d, max_size=d))
+    return np.asarray(w)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.sampled_from(TOPOLOGIES), st.integers(2, 12), st.data())
+def test_h_is_generalized_diffusion(topology, d, data):
+    """2a/2b/2c: support pattern, column stochasticity, weighted
+    reversibility; plus H b = b and the spectral gap for connected graphs."""
+    b = _hub_weights(data.draw, d)
+    b = b / b.sum()
+    adj = adjacency(topology, d, seed=1)
+    h = diffusion_matrix(adj, b)
+
+    # 2a: off-diagonal support matches the graph exactly
+    off = ~np.eye(d, dtype=bool)
+    assert np.all((h > 0)[off] == adj[off])
+    assert np.all(np.diag(h) > 0)
+    # 2b: column stochastic
+    np.testing.assert_allclose(h.sum(axis=0), 1.0, atol=1e-12)
+    # 2c (appendix Eq. 32 form): H_{i,j} b_j = H_{j,i} b_i
+    np.testing.assert_allclose(h * b[None, :], (h * b[None, :]).T, atol=1e-12)
+    # right eigenvector b, left eigenvector 1
+    np.testing.assert_allclose(h @ b, b, atol=1e-12)
+    np.testing.assert_allclose(np.ones(d) @ h, np.ones(d), atol=1e-12)
+    # simple eigenvalue 1, everything else strictly inside the unit circle
+    z = zeta(h)
+    assert 0.0 <= z < 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(4, 16))
+def test_path_is_sparsest_complete_is_densest(d):
+    """The paper uses the path graph as worst case: zeta(path) > zeta(ring)
+    >= zeta(complete) at uniform weights."""
+    b = np.ones(d) / d
+    zs = {t: zeta(diffusion_matrix(adjacency(t, d), b))
+          for t in ("complete", "ring", "path")}
+    assert zs["path"] >= zs["ring"] - 1e-9
+    assert zs["ring"] >= zs["complete"] - 1e-9
+    assert zs["complete"] <= 0.51          # near 0 for uniform complete
+
+
+def test_complete_uniform_zeta_zero():
+    d = 8
+    b = np.ones(d) / d
+    h = diffusion_matrix(adjacency("complete", d), b)
+    assert zeta(h) < 1e-9
+
+
+def test_single_hub_identity():
+    net = HubNetwork.build("complete", 1)
+    assert net.h.shape == (1, 1)
+    np.testing.assert_allclose(net.h, 1.0)
+    assert net.zeta == 0.0
+
+
+def test_gamma_monotone():
+    zs = [0.0, 0.2, 0.5, 0.8, 0.95]
+    gs = [gamma(z) for z in zs]
+    assert all(g2 > g1 for g1, g2 in zip(gs, gs[1:]))
+    assert gamma(1.0) == float("inf")
+
+
+def test_connectivity_check():
+    adj = np.zeros((4, 4), dtype=bool)
+    adj[0, 1] = adj[1, 0] = True
+    adj[2, 3] = adj[3, 2] = True          # two components
+    assert not is_connected(adj)
+    with pytest.raises(ValueError):
+        HubNetwork.build("unknown-topo", 4)
+
+
+def test_torus_requires_square():
+    with pytest.raises(ValueError):
+        adjacency("torus2d", 6)
+    a = adjacency("torus2d", 9)
+    assert is_connected(a)
+    assert a.sum(axis=1).min() >= 2
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 10), st.data())
+def test_erdos_always_connected(d, data):
+    seed = data.draw(st.integers(0, 100))
+    a = adjacency("erdos", d, seed=seed, erdos_p=0.3)
+    assert is_connected(a)
