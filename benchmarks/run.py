@@ -22,9 +22,9 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     t0 = time.time()
-    from benchmarks import (bench_kernels, bench_outer, bench_rates,
-                            bench_tau_q, bench_timeslot, bench_topology,
-                            roofline)
+    from benchmarks import (bench_kernels, bench_outer, bench_protocol,
+                            bench_rates, bench_tau_q, bench_timeslot,
+                            bench_topology, roofline)
 
     print("# kernels")
     bench_kernels.main(full=args.full)
@@ -39,6 +39,8 @@ def main(argv=None):
         bench_timeslot.main(full=args.full)
         print("# beyond-paper: hub outer optimizer")
         bench_outer.main(full=args.full)
+        print("# protocol engine: mixing x inner-optimizer sweep")
+        bench_protocol.main(full=args.full)
     print("# roofline")
     roofline.main([])
     print(f"total,{time.time() - t0:.1f}s")

@@ -1,0 +1,75 @@
+"""Mixing-strategy zoo: every registered strategy (and a custom one defined
+right here) through the same MLL-SGD protocol engine.
+
+Demonstrates the two extension axes the protocol engine opens up:
+
+  1. sweep every registered mixing strategy x inner optimizer with zero
+     bespoke code — each cell is just a `SimConfig`;
+  2. register a NEW strategy in ~10 lines (`@register`) and have it run
+     end-to-end (simulator shown here; the production mesh path and the
+     DiLoCo-style outer optimizer consume the same registry).
+
+  PYTHONPATH=src python examples/mixing_zoo.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import MLLSchedule, SimConfig, baselines, simulate
+from repro.core.protocol import (MixingStrategy, available_mixing, register,
+                                 subnet_average_two_stage,
+                                 hub_average_two_stage)
+from repro.data.pipeline import make_classification
+
+
+# --- a custom strategy: hub rounds mix in bf16 to halve wire bytes ---------
+@register("bf16_hub")
+class Bf16HubMixing(MixingStrategy):
+    """Full-precision subnet rounds; hub rounds quantize to bfloat16."""
+
+    def subnet(self, stacked, st):
+        return subnet_average_two_stage(stacked, st)
+
+    def hub(self, stacked, st):
+        return hub_average_two_stage(stacked, st, "bfloat16")
+
+
+# --- network + task --------------------------------------------------------
+rates = [1.0, 0.9, 0.7, 0.6] * 4
+net, sched = baselines.mll_sgd("ring", [4, 4, 4, 4], tau=8, q=2,
+                               worker_rates=rates)
+data = make_classification(net.num_workers, 256, dim=16, num_classes=4)
+
+
+def loss_fn(params, batch):
+    logits = batch["x"] @ params["w"] + params["b"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["y"][:, None], axis=1)[:, 0]
+    return (lse - gold).mean()
+
+
+def acc_fn(params, batch):
+    logits = batch["x"] @ params["w"] + params["b"]
+    return (jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32).mean()
+
+
+init = {"w": jnp.zeros((16, 4)), "b": jnp.zeros((4,))}
+
+# --- sweep the registry ----------------------------------------------------
+print(f"registered mixing strategies: {', '.join(available_mixing())}")
+print(f"{'mixing':>10s} {'inner_opt':>9s} {'final loss':>10s} {'test acc':>8s}")
+for mixing in available_mixing():
+    if mixing == "dense":
+        opts = ("sgd", "momentum")       # show the optimizer axis once
+    else:
+        opts = ("sgd",)
+    for opt in opts:
+        res = simulate(loss_fn, acc_fn, init, data.worker_data(), data.full,
+                       data.test, net, sched, steps=256,
+                       cfg=SimConfig(eta=0.1, batch_size=16, eval_every=256,
+                                     mixing=mixing, inner_opt=opt))
+        print(f"{mixing:>10s} {opt:>9s} {res.train_loss[-1]:10.4f} "
+              f"{res.test_acc[-1]:8.3f}")
+
+print("\nevery row above ran the SAME engine — a strategy is ~10 lines of "
+      "registration,\nnot a cross-cutting edit (see Bf16HubMixing in this "
+      "file).")

@@ -4,6 +4,11 @@ Builds a 3-subnet ring network with heterogeneous workers, trains logistic
 regression with the paper's Algorithm 1 (simulator path), and compares
 against Distributed SGD.
 
+The simulator runs on the protocol engine (`repro.core.protocol`): pass
+``SimConfig(mixing=..., inner_opt=..., kernel="pallas")`` to swap the
+averaging strategy, the gated inner optimizer, or the fused update+mix
+kernel — see examples/mixing_zoo.py for the full registry sweep.
+
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax

@@ -1,11 +1,17 @@
 """MLL-SGD core: the paper's contribution as a composable JAX module."""
 from repro.core.topology import HubNetwork, diffusion_matrix, zeta, gamma, adjacency
 from repro.core.hierarchy import MultiLevelNetwork, MLLSchedule
+from repro.core.protocol import (MixingStrategy, MIXING_REGISTRY, register,
+                                 get_mixing, available_mixing, MLLTrainState,
+                                 init_train_state, protocol_step,
+                                 gated_inner_update, init_gated_opt_state,
+                                 schedule_mix, state_from_network)
 from repro.core.simulator import (SimConfig, SimResult, simulate, replicate,
                                   weighted_average, apply_operator,
                                   barrier_round_slots, mll_round_slots)
 from repro.core.mllsgd import (MLLConfig, MLLState, build_network, build_state,
-                               mll_train_step, apply_schedule, phase_of,
+                               mll_train_step, apply_schedule,
+                               apply_schedule_with_state, phase_of,
                                gate_sample, gated_sgd_update,
                                hub_average_ppermute, hub_average_int8,
                                hub_average_int8_ef, init_error_feedback)
@@ -16,11 +22,15 @@ from repro.core import baselines
 __all__ = [
     "HubNetwork", "diffusion_matrix", "zeta", "gamma", "adjacency",
     "MultiLevelNetwork", "MLLSchedule",
+    "MixingStrategy", "MIXING_REGISTRY", "register", "get_mixing",
+    "available_mixing", "MLLTrainState", "init_train_state", "protocol_step",
+    "gated_inner_update", "init_gated_opt_state", "schedule_mix",
+    "state_from_network",
     "SimConfig", "SimResult", "simulate", "replicate", "weighted_average",
     "apply_operator", "barrier_round_slots", "mll_round_slots",
     "MLLConfig", "MLLState", "build_network", "build_state", "mll_train_step",
-    "apply_schedule", "phase_of", "gate_sample", "gated_sgd_update",
-    "hub_average_ppermute", "hub_average_int8",
+    "apply_schedule", "apply_schedule_with_state", "phase_of", "gate_sample",
+    "gated_sgd_update", "hub_average_ppermute", "hub_average_int8",
     "hub_average_int8_ef", "init_error_feedback",
     "OuterConfig", "init_outer_state", "outer_hub_step", "mll_outer_train_step",
     "baselines",

@@ -10,10 +10,15 @@ MLL-SGD         : the general algorithm
 Every baseline therefore runs through *the same code path* (Algorithm 1); the
 functions below just build the corresponding MultiLevelNetwork / schedule so
 benchmarks and tests cannot drift from the paper's definitions.
+
+`protocol_config` expresses the same four baselines as `MLLConfig` points of
+the protocol engine (mixing-strategy registry + gated inner optimizers), so
+the production mesh path and the simulator dispatch them identically.
 """
 from __future__ import annotations
 
 from repro.core.hierarchy import MLLSchedule, MultiLevelNetwork
+from repro.core.mllsgd import MLLConfig
 
 
 def distributed_sgd(num_workers: int) -> tuple[MultiLevelNetwork, MLLSchedule]:
@@ -41,3 +46,32 @@ def mll_sgd(topology: str, workers_per_subnet: list[int], tau: int, q: int,
                                   worker_rates=worker_rates,
                                   worker_weights=worker_weights, seed=seed)
     return net, MLLSchedule(tau=tau, q=q)
+
+
+def protocol_config(name: str, *, tau: int = 8, q: int = 4,
+                    eta: float = 0.05, worker_rates=1.0,
+                    **overrides) -> MLLConfig:
+    """The paper's baselines as protocol-engine config points (Section 6).
+
+    name in {"distributed_sgd", "local_sgd", "hl_sgd", "mll_sgd"}; extra
+    keyword overrides (mixing, inner_opt, mix_dtype, ...) pass straight
+    through to `MLLConfig`, so e.g.
+    ``protocol_config("hl_sgd", mixing="int8_ef", inner_opt="momentum")``
+    is one line."""
+    presets = {
+        # one big subnet, average every tick, synchronous workers
+        "distributed_sgd": dict(tau=1, q=1, hub_topology="complete",
+                                worker_rates=1.0),
+        # single-level: averaging every tau, no separate hub cadence
+        "local_sgd": dict(tau=tau, q=1, hub_topology="complete",
+                          worker_rates=1.0),
+        # hub-and-spoke global server, homogeneous workers
+        "hl_sgd": dict(tau=tau, q=q, hub_topology="star", worker_rates=1.0),
+        # the general algorithm: heterogeneous rates allowed
+        "mll_sgd": dict(tau=tau, q=q, hub_topology="complete",
+                        worker_rates=worker_rates),
+    }
+    if name not in presets:
+        raise ValueError(f"unknown baseline {name!r}; "
+                         f"expected one of {tuple(presets)}")
+    return MLLConfig(eta=eta, **{**presets[name], **overrides})

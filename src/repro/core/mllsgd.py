@@ -9,60 +9,100 @@ The worker axis is sharded over the mesh:
   * ``worker_per_data`` (paper-faithful fine granularity): W = n_pods * data,
     worker axis sharded over ("pod", "data").  Each data index holds an
     independent replica; its params' inner dims are sharded over "model".
+  * ``worker_per_chip`` (finest): W = n_pods * data * model — every chip is
+    an independent worker; no inner-dim sharding remains.  Maximises
+    scenario diversity per mesh at the cost of W model replicas in HBM.
   * ``worker_per_pod`` (DiLoCo-style, for replicas too big for 16 chips):
     W = n_pods, worker axis sharded over "pod"; inner dims sharded over
     ("data", "model") — FSDP inside the worker.
 
-The averaging operators are then *literally the paper's matrices*:
+The averaging rounds are **pluggable mixing strategies** from the registry
+in `repro.core.protocol`: ``MLLConfig(mixing=...)`` selects any registered
+strategy (``dense``, ``two_stage``, ``ppermute``, ``int8``, ``int8_ef``,
+or one you register with ``@protocol.register``).  The dense strategy is
+*literally the paper's matrices*:
 
   subnet step:  X <- X V   (v-weighted average within each sub-network)
   hub step:     X <- X Z,  Z_ij = H_{d(i),d(j)} v_i
 
-applied as einsums over the worker axis; GSPMD lowers the contraction over the
-sharded worker axis to data/pod-axis collectives.  A structured two-stage
-variant (reshape W -> (D, N_d); average over N_d, then mix over D with H) is
-provided for the collective-bytes hillclimb — it produces within-pod
-replica-group all-reduces plus a small pod-axis mix instead of one dense W x W
-contraction.
+applied as einsums over the worker axis; GSPMD lowers the contraction over
+the sharded worker axis to data/pod-axis collectives.  The structured
+variants trade that dense contraction for within-pod replica-group
+all-reduces plus a small pod-axis mix (see the strategy docstrings).
 
 Worker heterogeneity (Eq. 3) is a Bernoulli(p_i) gate on each worker's local
-gradient, drawn from a counter-based PRNG keyed on (seed, step) so every
-device in a worker's group draws the same gate.
+update, drawn from a counter-based PRNG keyed on (seed, step) so every
+device in a worker's group draws the same gate.  ``MLLConfig(inner_opt=...)``
+swaps the plain SGD inner update for any `repro.optim.optimizers` optimizer,
+with per-worker state gated alongside the params (protocol engine).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Sequence
+from typing import Any
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.hierarchy import MLLSchedule, MultiLevelNetwork
+from repro.core import protocol
+from repro.core.protocol import (  # re-exported: stable public API  # noqa: F401
+    MLLState, MLLTrainState, PHASE_LOCAL, PHASE_SUBNET, PHASE_HUB,
+    gate_sample, gated_sgd_update, hub_average_dense, hub_average_int8,
+    hub_average_int8_ef, hub_average_ppermute, hub_average_two_stage,
+    init_error_feedback, phase_of, state_from_network, subnet_average_dense,
+    subnet_average_two_stage)
+from repro.optim import optimizers as optim_mod
 
 PyTree = Any
 
-PHASE_LOCAL, PHASE_SUBNET, PHASE_HUB = 0, 1, 2
+GRANULARITIES = ("worker_per_data", "worker_per_chip", "worker_per_pod")
 
 
 @dataclasses.dataclass(frozen=True)
 class MLLConfig:
-    """Hierarchy + schedule configuration for production training."""
+    """Hierarchy + schedule + protocol configuration for production training.
+
+    Every (mixing x inner_opt x schedule) combination is a config point:
+    ``mixing`` names a strategy in `protocol.MIXING_REGISTRY`, ``inner_opt``
+    an optimizer in `repro.optim.optimizers` (extra constructor kwargs via
+    ``inner_opt_args`` as a tuple of (key, value) pairs, e.g.
+    ``(("beta", 0.95),)``).
+    """
     tau: int = 8
     q: int = 4
     eta: float = 0.05
-    granularity: str = "worker_per_data"   # or "worker_per_pod"
+    granularity: str = "worker_per_data"    # one of GRANULARITIES
     hub_topology: str = "complete"          # topology over pods
     worker_rates: tuple[float, ...] | float = 1.0   # p_i (scalar = uniform)
     worker_weights: tuple[float, ...] | None = None  # w_i (None = uniform)
-    mixing: str = "dense"                   # "dense" (X Z einsum) | "two_stage"
+    mixing: str = "dense"                   # any registered mixing strategy
     mix_dtype: str | None = None            # e.g. "bfloat16" to quantize hub mixing
     accum_dtype: str = "float32"            # microbatch grad-accumulator dtype
+    inner_opt: str = "sgd"                  # "sgd" | "momentum" | "adamw"
+    inner_opt_args: tuple = ()              # ((key, value), ...) extra kwargs
     seed: int = 0
+
+    def __post_init__(self):
+        if self.granularity not in GRANULARITIES:
+            raise ValueError(f"unknown granularity {self.granularity!r}; "
+                             f"expected one of {GRANULARITIES}")
+        if self.mixing not in protocol.MIXING_REGISTRY:
+            raise ValueError(f"unknown mixing {self.mixing!r}; registered: "
+                             f"{protocol.available_mixing()}")
+        if self.inner_opt not in optim_mod.OPTIMIZERS:
+            raise ValueError(f"unknown inner_opt {self.inner_opt!r}; "
+                             f"known: {tuple(sorted(optim_mod.OPTIMIZERS))}")
 
     @property
     def schedule(self) -> MLLSchedule:
         return MLLSchedule(tau=self.tau, q=self.q)
+
+    def mixing_strategy(self) -> protocol.MixingStrategy:
+        return protocol.resolve_mixing(self)
+
+    def inner_optimizer(self) -> optim_mod.Optimizer:
+        return protocol.resolve_inner_optimizer(self)
 
 
 def build_network(cfg: MLLConfig, n_pods: int, data_size: int,
@@ -87,283 +127,45 @@ def build_network(cfg: MLLConfig, n_pods: int, data_size: int,
         worker_weights=weights, seed=cfg.seed)
 
 
-@dataclasses.dataclass(frozen=True)
-class MLLState:
-    """Static (traced-constant) operator bundle used inside train_step."""
-    v_op: jnp.ndarray           # (W, W)
-    z_op: jnp.ndarray           # (W, W)
-    v_weights: jnp.ndarray      # (W,) within-subnet weights
-    h: jnp.ndarray              # (D, D)
-    rates: jnp.ndarray          # (W,)
-    num_subnets: int
-    workers_per_subnet: int
-
-
 def build_state(cfg: MLLConfig, network: MultiLevelNetwork,
                 dtype=jnp.float32) -> MLLState:
     nd = set(network.workers_per_subnet)
     if len(nd) != 1:
         raise ValueError("production path assumes equal-size sub-networks")
-    return MLLState(
-        v_op=jnp.asarray(network.v_matrix(), dtype=dtype),
-        z_op=jnp.asarray(network.z_matrix(), dtype=dtype),
-        v_weights=jnp.asarray(network.v, dtype=dtype),
-        h=jnp.asarray(network.hub_net.h, dtype=dtype),
-        rates=jnp.asarray(network.worker_rates, dtype=dtype),
-        num_subnets=network.num_subnets,
-        workers_per_subnet=int(next(iter(nd))),
-    )
+    return state_from_network(network, dtype=dtype)
 
 
-# ----------------------------------------------------------------- primitives
-def phase_of(step: jnp.ndarray, tau: int, q: int) -> jnp.ndarray:
-    """Phase of 1-based step: 0 local / 1 subnet / 2 hub (Eq. 6)."""
-    hub = (step % (q * tau)) == 0
-    sub = (step % tau) == 0
-    return jnp.where(hub, PHASE_HUB, jnp.where(sub, PHASE_SUBNET, PHASE_LOCAL))
-
-
-def gate_sample(seed: int, step: jnp.ndarray, rates: jnp.ndarray) -> jnp.ndarray:
-    """theta_k ~ Bernoulli(p_i), identical on every device (counter-based)."""
-    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
-    u = jax.random.uniform(key, rates.shape, dtype=rates.dtype)
-    return (u < rates).astype(rates.dtype)
-
-
-def gated_sgd_update(stacked: PyTree, grads: PyTree, theta: jnp.ndarray,
-                     eta: float) -> PyTree:
-    """x_i <- x_i - eta * theta_i * g_i  per worker (Eq. 2/3)."""
-    def upd(x, g):
-        gate = theta.astype(x.dtype).reshape(theta.shape + (1,) * (x.ndim - 1))
-        return x - jnp.asarray(eta, x.dtype) * gate * g.astype(x.dtype)
-    return jax.tree.map(upd, stacked, grads)
-
-
-def _einsum_operator(t: jnp.ndarray, stacked: PyTree,
-                     mix_dtype: str | None) -> PyTree:
-    def mix(x):
-        xm = x.astype(mix_dtype) if mix_dtype else x
-        y = jnp.einsum("ij,i...->j...", t.astype(xm.dtype), xm)
-        return y.astype(x.dtype)
-    return jax.tree.map(mix, stacked)
-
-
-def subnet_average_dense(stacked: PyTree, st: MLLState,
-                         mix_dtype: str | None = None) -> PyTree:
-    return _einsum_operator(st.v_op, stacked, mix_dtype)
-
-
-def hub_average_dense(stacked: PyTree, st: MLLState,
-                      mix_dtype: str | None = None) -> PyTree:
-    return _einsum_operator(st.z_op, stacked, mix_dtype)
-
-
-def subnet_average_two_stage(stacked: PyTree, st: MLLState,
-                             mix_dtype: str | None = None) -> PyTree:
-    """Grouped weighted mean: reshape W->(D, Nd), contract Nd, broadcast back.
-
-    GSPMD lowers the Nd contraction to an all-reduce whose replica groups stay
-    inside each pod (ICI), instead of a dense W x W global contraction.
-    """
-    d, nd = st.num_subnets, st.workers_per_subnet
-    v = st.v_weights.reshape(d, nd)
-
-    def mix(x):
-        xm = x.astype(mix_dtype) if mix_dtype else x
-        xg = xm.reshape((d, nd) + x.shape[1:])
-        mean = jnp.einsum("dn,dn...->d...", v.astype(xm.dtype), xg)
-        y = jnp.broadcast_to(mean[:, None], xg.shape).reshape(x.shape)
-        return y.astype(x.dtype)
-    return jax.tree.map(mix, stacked)
-
-
-def hub_average_two_stage(stacked: PyTree, st: MLLState,
-                          mix_dtype: str | None = None) -> PyTree:
-    """Subnet average, then H-mix the D hub models over the pod axis."""
-    d, nd = st.num_subnets, st.workers_per_subnet
-    v = st.v_weights.reshape(d, nd)
-
-    def mix(x):
-        xm = x.astype(mix_dtype) if mix_dtype else x
-        xg = xm.reshape((d, nd) + x.shape[1:])
-        z = jnp.einsum("dn,dn...->d...", v.astype(xm.dtype), xg)   # hub models
-        y = jnp.einsum("de,d...->e...", st.h.astype(xm.dtype), z)  # H mixing
-        out = jnp.broadcast_to(y[:, None], xg.shape).reshape(x.shape)
-        return out.astype(x.dtype)
-    return jax.tree.map(mix, stacked)
-
-
-def _int8_quantize(x: jnp.ndarray, axes: tuple[int, ...]) -> tuple:
-    """Symmetric per-hub int8 quantization: scale = max|x| / 127 over all
-    dims except the leading hub dim."""
-    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axes, keepdims=True)
-    scale = jnp.maximum(amax, 1e-12) / 127.0
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
-                 ).astype(jnp.int8)
-    return q, scale
-
-
-def hub_average_int8(stacked: PyTree, st: MLLState,
-                     mix_dtype: str | None = None) -> PyTree:
-    """Beyond-paper: int8-quantized hub mixing over circulant H.
-
-    The subnet average stays full precision (ICI is cheap); neighbour hub
-    models cross the pod boundary as int8 + one f32 scale per hub model.
-    Structured as coefficient-weighted ROLLS (like ppermute mixing) rather
-    than an einsum: a contraction over the pod-sharded hub dim would make
-    GSPMD all-reduce f32 partial sums — the rolls guarantee the wire
-    carries the int8 buffers (collective-permute of int8), halving DCN
-    bytes vs bf16.  Quantization error is symmetric per-tensor
-    (<= scale/2 per element); error feedback would remove the residual
-    bias entirely — future work."""
-    d, nd = st.num_subnets, st.workers_per_subnet
-    v = st.v_weights.reshape(d, nd)
-    coeffs = _circulant_coeffs(st)
-
-    def mix(x):
-        xg = x.astype(jnp.float32).reshape((d, nd) + x.shape[1:])
-        z = jnp.einsum("dn,dn...->d...", v, xg)            # hub models (f32)
-        q, scale = _int8_quantize(z, tuple(range(1, z.ndim)))
-        y = None
-        for o, c in enumerate(coeffs):
-            if abs(float(c)) < 1e-12:
-                continue
-            if o:
-                qo = jnp.roll(q, -o, axis=0)               # int8 on the wire
-                so = jnp.roll(scale, -o, axis=0)
-                term = float(c) * (qo.astype(jnp.float32) * so)
-            else:
-                term = float(c) * z                        # own model exact
-            y = term if y is None else y + term
-        out = jnp.broadcast_to(y[:, None], (d, nd) + x.shape[1:])
-        return out.reshape(x.shape).astype(x.dtype)
-    return jax.tree.map(mix, stacked)
-
-
-def _circulant_coeffs(st: MLLState) -> np.ndarray:
-    """H as circulant coefficients c_o with y_e = sum_o c_o z_{(e+o) mod D}.
-    Valid when the hub graph + weights make H circulant (ring or complete
-    with uniform hub weights) — checked here at trace time."""
-    h = np.asarray(st.h)
-    d = h.shape[0]
-    c = h[:, 0]                                   # c_o = H[o, 0]
-    want = np.empty_like(h)
-    for e in range(d):
-        for o in range(d):
-            want[(e + o) % d, e] = c[o]
-    if not np.allclose(want, h, atol=1e-9):
-        raise ValueError("mixing='ppermute' needs a circulant H (ring or "
-                         "complete hub graph with uniform hub weights)")
-    return c
-
-
-def hub_average_ppermute(stacked: PyTree, st: MLLState,
-                         mix_dtype: str | None = None) -> PyTree:
-    """Beyond-paper: circulant-H hub mixing as a sum of rolls along the
-    (pod-sharded) hub axis.  Each nonzero coefficient lowers to a
-    collective-permute of one hub model instead of the all-gather the dense
-    D x D contraction needs — DCN bytes scale with the graph DEGREE, not D."""
-    d, nd = st.num_subnets, st.workers_per_subnet
-    v = st.v_weights.reshape(d, nd)
-    coeffs = _circulant_coeffs(st)
-
-    def mix(x):
-        xm = x.astype(mix_dtype) if mix_dtype else x
-        xg = xm.reshape((d, nd) + x.shape[1:])
-        z = jnp.einsum("dn,dn...->d...", v.astype(xm.dtype), xg)
-        y = None
-        for o, c in enumerate(coeffs):
-            if abs(float(c)) < 1e-12:
-                continue                     # non-neighbour: no traffic
-            zo = jnp.roll(z, -o, axis=0) if o else z
-            term = jnp.asarray(c, zo.dtype) * zo
-            y = term if y is None else y + term
-        out = jnp.broadcast_to(y[:, None], xg.shape).reshape(x.shape)
-        return out.astype(x.dtype)
-    return jax.tree.map(mix, stacked)
-
-
-def init_error_feedback(stacked_params: PyTree) -> PyTree:
-    """Residual state for error-feedback int8 mixing (one buffer per worker,
-    same layout/sharding as the params)."""
-    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
-                        stacked_params)
-
-
-def hub_average_int8_ef(stacked: PyTree, ef: PyTree, st: MLLState,
-                        ) -> tuple[PyTree, PyTree]:
-    """int8 hub mixing WITH error feedback: the quantization residual of
-    each hub round is added back before the next round's quantization, so
-    the long-run averaging is unbiased (Karimireddy et al. 2019 style).
-
-    Returns (mixed params, new residual state).  Wire format identical to
-    `hub_average_int8` (int8 rolls); only local state is added."""
-    d, nd = st.num_subnets, st.workers_per_subnet
-    v = st.v_weights.reshape(d, nd)
-    coeffs = _circulant_coeffs(st)
-
-    def mix(x, e):
-        xg = x.astype(jnp.float32).reshape((d, nd) + x.shape[1:])
-        eg = e.reshape((d, nd) + x.shape[1:])
-        z = jnp.einsum("dn,dn...->d...", v, xg + eg)      # compensated avg
-        q, scale = _int8_quantize(z, tuple(range(1, z.ndim)))
-        deq_own = q.astype(jnp.float32) * scale
-        resid = z - deq_own                                # what the wire lost
-        y = None
-        for o, c in enumerate(coeffs):
-            if abs(float(c)) < 1e-12:
-                continue
-            if o:
-                qo = jnp.roll(q, -o, axis=0)               # int8 on the wire
-                so = jnp.roll(scale, -o, axis=0)
-                term = float(c) * (qo.astype(jnp.float32) * so)
-            else:
-                term = float(c) * deq_own
-            y = term if y is None else y + term
-        out = jnp.broadcast_to(y[:, None], (d, nd) + x.shape[1:])
-        new_e = jnp.broadcast_to(resid[:, None] / nd, (d, nd) + x.shape[1:])
-        return (out.reshape(x.shape).astype(x.dtype),
-                new_e.reshape(x.shape).astype(jnp.float32))
-
-    pairs = jax.tree.map(mix, stacked, ef)
-    first = jax.tree.map(lambda t: t[0], pairs,
-                         is_leaf=lambda t: isinstance(t, tuple))
-    second = jax.tree.map(lambda t: t[1], pairs,
-                          is_leaf=lambda t: isinstance(t, tuple))
-    return first, second
+def apply_schedule_with_state(stacked: PyTree, mix_state: PyTree,
+                              step: jnp.ndarray, cfg: MLLConfig,
+                              st: MLLState, *,
+                              static_phase: int | None = None,
+                              ) -> tuple[PyTree, PyTree]:
+    """Apply T_k for this step through the registered mixing strategy,
+    threading per-strategy state (e.g. int8_ef residuals).  Pass
+    ``mix_state=None`` to initialize fresh state."""
+    strategy = cfg.mixing_strategy()
+    if mix_state is None:
+        mix_state = strategy.init_state(stacked)
+    return protocol.schedule_mix(strategy, stacked, mix_state, step, st,
+                                 cfg.tau, cfg.q, static_phase=static_phase)
 
 
 def apply_schedule(stacked: PyTree, step: jnp.ndarray, cfg: MLLConfig,
                    st: MLLState, *, static_phase: int | None = None) -> PyTree:
-    """Apply T_k for this step via lax.switch (all branches lowered -> the
-    dry-run HLO exposes every collective the protocol ever issues)."""
-    if cfg.mixing == "dense":
-        sub = lambda p: subnet_average_dense(p, st, cfg.mix_dtype)
-        hub = lambda p: hub_average_dense(p, st, cfg.mix_dtype)
-    elif cfg.mixing == "two_stage":
-        sub = lambda p: subnet_average_two_stage(p, st, cfg.mix_dtype)
-        hub = lambda p: hub_average_two_stage(p, st, cfg.mix_dtype)
-    elif cfg.mixing == "ppermute":
-        sub = lambda p: subnet_average_two_stage(p, st, cfg.mix_dtype)
-        hub = lambda p: hub_average_ppermute(p, st, cfg.mix_dtype)
-    elif cfg.mixing == "int8":
-        sub = lambda p: subnet_average_two_stage(p, st, cfg.mix_dtype)
-        hub = lambda p: hub_average_int8(p, st, cfg.mix_dtype)
-    else:
-        raise ValueError(f"unknown mixing {cfg.mixing!r}")
-    branches = [lambda p: p, sub, hub]
-    if static_phase is not None:
-        # trace-time pinned branch: the dry-run lowers each phase separately
-        # so the roofline analysis gets exact per-phase costs
-        return branches[static_phase](stacked)
-    ph = phase_of(step, cfg.tau, cfg.q)
-    return jax.lax.switch(ph, branches, stacked)
+    """State-free view of `apply_schedule_with_state` (stateful strategies
+    run with fresh state; use the *_with_state form or `protocol_step` to
+    carry it)."""
+    out, _ = apply_schedule_with_state(stacked, None, step, cfg, st,
+                                       static_phase=static_phase)
+    return out
 
 
 def mll_train_step(stacked_params: PyTree, grads: PyTree, step: jnp.ndarray,
                    cfg: MLLConfig, st: MLLState, *,
                    static_phase: int | None = None) -> PyTree:
-    """One full MLL-SGD tick: gated local update then the scheduled averaging.
+    """One MLL-SGD tick with the paper's plain SGD inner update (the
+    stateless fast path — `protocol.protocol_step` is the general engine
+    carrying inner-optimizer and mixing state).
 
     `step` is the 1-based global tick; `grads` are per-worker minibatch
     gradients with the worker axis leading on every leaf.

@@ -16,6 +16,12 @@ reduction is property-tested.  Communication cost is identical (one Z
 averaging per hub round); the anchor and momentum live on the same worker
 layout as the params.
 
+The Z-average itself comes from the mixing-strategy registry
+(`repro.core.protocol`), so the outer optimizer composes with ANY
+registered strategy — dense, two_stage, ppermute, int8, and stateful
+int8_ef (pass ``cfg`` to `init_outer_state` so the outer state carries the
+strategy's residual buffers under the ``"mixing"`` key).
+
 Reference: Douillard et al., "DiLoCo: Distributed Low-Communication
 Training of Language Models" (arXiv:2311.08105), adapted to the MLL-SGD
 two-level schedule and weighted Z operator.
@@ -28,11 +34,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core.mllsgd import (MLLConfig, MLLState, apply_schedule,
-                               gate_sample, gated_sgd_update,
-                               hub_average_dense, hub_average_ppermute,
-                               hub_average_two_stage, phase_of,
-                               subnet_average_dense, subnet_average_two_stage)
+from repro.core.mllsgd import MLLConfig, MLLState, gate_sample, gated_sgd_update
+from repro.core.protocol import phase_of, resolve_mixing
 
 PyTree = Any
 
@@ -43,9 +46,14 @@ class OuterConfig:
     beta: float = 0.9
 
 
-def init_outer_state(stacked_params: PyTree) -> PyTree:
+def init_outer_state(stacked_params: PyTree,
+                     cfg: MLLConfig | None = None) -> PyTree:
     """anchor = current params; momentum = 0.  Same worker layout/sharding
     as the params so no resharding enters the hub step.
+
+    Pass ``cfg`` to also carry the mixing strategy's state (e.g. int8_ef
+    residuals) under the ``"mixing"`` key; without it the state slot is
+    empty and stateful strategies run with fresh state each hub round.
 
     Contract: call on a subnet-consistent state (normally the replicated
     init).  The hub step then keeps anchors identical within each
@@ -55,23 +63,26 @@ def init_outer_state(stacked_params: PyTree) -> PyTree:
     return {
         "anchor": jax.tree.map(lambda x: x, stacked_params),
         "momentum": jax.tree.map(lambda x: jnp.zeros_like(x), stacked_params),
+        "mixing": (resolve_mixing(cfg).init_state(stacked_params)
+                   if cfg is not None else ()),
     }
-
-
-def _hub_avg(stacked: PyTree, cfg: MLLConfig, st: MLLState) -> PyTree:
-    if cfg.mixing == "dense":
-        return hub_average_dense(stacked, st, cfg.mix_dtype)
-    if cfg.mixing == "two_stage":
-        return hub_average_two_stage(stacked, st, cfg.mix_dtype)
-    if cfg.mixing == "ppermute":
-        return hub_average_ppermute(stacked, st, cfg.mix_dtype)
-    raise ValueError(cfg.mixing)
 
 
 def outer_hub_step(stacked: PyTree, outer: PyTree, cfg: MLLConfig,
                    st: MLLState, ocfg: OuterConfig) -> tuple[PyTree, PyTree]:
-    """The hub-phase update: Z-average, then Nesterov on the outer delta."""
-    avg = _hub_avg(stacked, cfg, st)
+    """The hub-phase update: Z-average (any registered mixing strategy),
+    then Nesterov on the outer delta."""
+    strategy = resolve_mixing(cfg)
+    mix_state = outer.get("mixing", ())
+    empty_slot = isinstance(mix_state, tuple) and not mix_state
+    if empty_slot and jax.tree.leaves(strategy.init_state(stacked)):
+        raise ValueError(
+            f"mixing strategy {strategy.name!r} is stateful; build the outer "
+            "state with init_outer_state(params, cfg) so its state (e.g. "
+            "error-feedback residuals) is carried between hub rounds")
+    avg, new_mix = strategy.hub_with_state(stacked, st, mix_state)
+    if empty_slot:
+        new_mix = mix_state   # keep lax.switch branch structures identical
 
     def upd(anchor, a, m):
         af = anchor.astype(jnp.float32)
@@ -86,7 +97,10 @@ def outer_hub_step(stacked: PyTree, outer: PyTree, cfg: MLLConfig,
     new_mom = jax.tree.map(lambda t: t[1], pairs,
                            is_leaf=lambda t: isinstance(t, tuple))
     new_stacked = jax.tree.map(lambda x: x, new_anchor)
-    return new_stacked, {"anchor": new_anchor, "momentum": new_mom}
+    new_outer = {"anchor": new_anchor, "momentum": new_mom}
+    if "mixing" in outer:
+        new_outer["mixing"] = new_mix
+    return new_stacked, new_outer
 
 
 def mll_outer_train_step(stacked: PyTree, outer: PyTree, grads: PyTree,
@@ -95,20 +109,21 @@ def mll_outer_train_step(stacked: PyTree, outer: PyTree, grads: PyTree,
     """One MLL-SGD tick with the outer optimizer on hub rounds.
 
     local / subnet phases follow the paper exactly; hub phases run the
-    Nesterov outer update instead of plain Z averaging."""
+    Nesterov outer update instead of plain Z averaging.  The mixing
+    strategy comes from the registry, so any ``cfg.mixing`` works here."""
+    strategy = resolve_mixing(cfg)
     theta = gate_sample(cfg.seed, step, st.rates)
     upd = gated_sgd_update(stacked, grads, theta, cfg.eta)
 
-    if cfg.mixing == "dense":
-        sub = lambda p: subnet_average_dense(p, st, cfg.mix_dtype)
-    else:
-        sub = lambda p: subnet_average_two_stage(p, st, cfg.mix_dtype)
-
     def local_branch(p, o):
-        return p, o
+        return p, dict(o)
 
     def subnet_branch(p, o):
-        return sub(p), o
+        new_p, new_mix = strategy.subnet_with_state(p, st, o.get("mixing", ()))
+        o2 = dict(o)
+        if "mixing" in o:
+            o2["mixing"] = new_mix
+        return new_p, o2
 
     def hub_branch(p, o):
         return outer_hub_step(p, o, cfg, st, ocfg)

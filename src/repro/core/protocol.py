@@ -1,0 +1,561 @@
+"""Protocol engine: the paper's algorithm family as (mixing x inner-opt x schedule).
+
+The paper's observation (Section 5) is that Distributed SGD, Local SGD,
+HL-SGD and MLL-SGD are ONE algorithm parameterized by an averaging operator
+schedule.  This module makes that literal in code: every execution path
+(simulator, production mesh trainer, hub-level outer optimizer) drives the
+same three pluggable pieces:
+
+  1. a **MixingStrategy** from the registry below — how the subnet (V) and
+     hub (Z) averaging rounds are realised (dense einsum, grouped two-stage,
+     circulant ppermute rolls, int8 wire format, int8 + error feedback, ...),
+  2. an **inner optimizer** (`repro.optim.optimizers.Optimizer`) applied
+     per worker under the Bernoulli(p_i) gate of Eq. (3) — a gated worker
+     skips the step entirely: params AND optimizer state stay frozen,
+  3. the (tau, q) **schedule** choosing local / subnet / hub per tick.
+
+Registering a new strategy is ~15 lines:
+
+    from repro.core.protocol import MixingStrategy, register
+
+    @register("my_mix")
+    class MyMixing(MixingStrategy):
+        def subnet(self, stacked, st):  # V round
+            ...
+        def hub(self, stacked, st):     # Z round
+            ...
+
+after which ``MLLConfig(mixing="my_mix")`` runs it through every path.
+Stateful strategies (e.g. error feedback) additionally override
+``init_state`` and ``hub_with_state``; the engine threads the state through
+``lax.switch`` alongside the params.
+
+With ``sgd`` + any stateless strategy, ``protocol_step`` reproduces the
+legacy ``mll_train_step`` trajectory bit-for-bit (property-tested in
+tests/test_protocol.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import optimizers as optim_mod
+
+PyTree = Any
+
+PHASE_LOCAL, PHASE_SUBNET, PHASE_HUB = 0, 1, 2
+
+
+@dataclasses.dataclass(frozen=True)
+class MLLState:
+    """Static (traced-constant) operator bundle used inside train steps.
+
+    ``workers_per_subnet`` is 0 when sub-networks have unequal sizes; only
+    the dense (matrix) strategies support that case — grouped strategies
+    raise at trace time.
+    """
+    v_op: jnp.ndarray           # (W, W)
+    z_op: jnp.ndarray           # (W, W)
+    v_weights: jnp.ndarray      # (W,) within-subnet weights
+    h: jnp.ndarray              # (D, D)
+    rates: jnp.ndarray          # (W,)
+    num_subnets: int
+    workers_per_subnet: int
+
+
+def state_from_network(network, dtype=jnp.float32) -> MLLState:
+    """Operator bundle for any MultiLevelNetwork (unequal subnets allowed)."""
+    nd = set(network.workers_per_subnet)
+    return MLLState(
+        v_op=jnp.asarray(network.v_matrix(), dtype=dtype),
+        z_op=jnp.asarray(network.z_matrix(), dtype=dtype),
+        v_weights=jnp.asarray(network.v, dtype=dtype),
+        h=jnp.asarray(network.hub_net.h, dtype=dtype),
+        rates=jnp.asarray(network.worker_rates, dtype=dtype),
+        num_subnets=network.num_subnets,
+        workers_per_subnet=int(next(iter(nd))) if len(nd) == 1 else 0,
+    )
+
+
+# ----------------------------------------------------------------- primitives
+def phase_of(step: jnp.ndarray, tau: int, q: int) -> jnp.ndarray:
+    """Phase of 1-based step: 0 local / 1 subnet / 2 hub (Eq. 6)."""
+    hub = (step % (q * tau)) == 0
+    sub = (step % tau) == 0
+    return jnp.where(hub, PHASE_HUB, jnp.where(sub, PHASE_SUBNET, PHASE_LOCAL))
+
+
+def gate_sample(seed: int, step: jnp.ndarray, rates: jnp.ndarray) -> jnp.ndarray:
+    """theta_k ~ Bernoulli(p_i), identical on every device (counter-based)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    u = jax.random.uniform(key, rates.shape, dtype=rates.dtype)
+    return (u < rates).astype(rates.dtype)
+
+
+def gated_sgd_update(stacked: PyTree, grads: PyTree, theta: jnp.ndarray,
+                     eta: float) -> PyTree:
+    """x_i <- x_i - eta * theta_i * g_i  per worker (Eq. 2/3)."""
+    def upd(x, g):
+        gate = theta.astype(x.dtype).reshape(theta.shape + (1,) * (x.ndim - 1))
+        return x - jnp.asarray(eta, x.dtype) * gate * g.astype(x.dtype)
+    return jax.tree.map(upd, stacked, grads)
+
+
+def _einsum_operator(t: jnp.ndarray, stacked: PyTree,
+                     mix_dtype: str | None) -> PyTree:
+    def mix(x):
+        xm = x.astype(mix_dtype) if mix_dtype else x
+        y = jnp.einsum("ij,i...->j...", t.astype(xm.dtype), xm)
+        return y.astype(x.dtype)
+    return jax.tree.map(mix, stacked)
+
+
+def _grouped_dims(st: MLLState) -> tuple[int, int]:
+    if st.workers_per_subnet <= 0:
+        raise ValueError(
+            "grouped mixing (two_stage/ppermute/int8/int8_ef) requires "
+            "equal-size sub-networks; use mixing='dense' for unequal subnets")
+    return st.num_subnets, st.workers_per_subnet
+
+
+def subnet_average_dense(stacked: PyTree, st: MLLState,
+                         mix_dtype: str | None = None) -> PyTree:
+    return _einsum_operator(st.v_op, stacked, mix_dtype)
+
+
+def hub_average_dense(stacked: PyTree, st: MLLState,
+                      mix_dtype: str | None = None) -> PyTree:
+    return _einsum_operator(st.z_op, stacked, mix_dtype)
+
+
+def subnet_average_two_stage(stacked: PyTree, st: MLLState,
+                             mix_dtype: str | None = None) -> PyTree:
+    """Grouped weighted mean: reshape W->(D, Nd), contract Nd, broadcast back.
+
+    GSPMD lowers the Nd contraction to an all-reduce whose replica groups stay
+    inside each pod (ICI), instead of a dense W x W global contraction.
+    """
+    d, nd = _grouped_dims(st)
+    v = st.v_weights.reshape(d, nd)
+
+    def mix(x):
+        xm = x.astype(mix_dtype) if mix_dtype else x
+        xg = xm.reshape((d, nd) + x.shape[1:])
+        mean = jnp.einsum("dn,dn...->d...", v.astype(xm.dtype), xg)
+        y = jnp.broadcast_to(mean[:, None], xg.shape).reshape(x.shape)
+        return y.astype(x.dtype)
+    return jax.tree.map(mix, stacked)
+
+
+def hub_average_two_stage(stacked: PyTree, st: MLLState,
+                          mix_dtype: str | None = None) -> PyTree:
+    """Subnet average, then H-mix the D hub models over the pod axis."""
+    d, nd = _grouped_dims(st)
+    v = st.v_weights.reshape(d, nd)
+
+    def mix(x):
+        xm = x.astype(mix_dtype) if mix_dtype else x
+        xg = xm.reshape((d, nd) + x.shape[1:])
+        z = jnp.einsum("dn,dn...->d...", v.astype(xm.dtype), xg)   # hub models
+        y = jnp.einsum("de,d...->e...", st.h.astype(xm.dtype), z)  # H mixing
+        out = jnp.broadcast_to(y[:, None], xg.shape).reshape(x.shape)
+        return out.astype(x.dtype)
+    return jax.tree.map(mix, stacked)
+
+
+def _int8_quantize(x: jnp.ndarray, axes: tuple[int, ...]) -> tuple:
+    """Symmetric per-hub int8 quantization: scale = max|x| / 127 over all
+    dims except the leading hub dim."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axes, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def _circulant_coeffs(st: MLLState) -> np.ndarray:
+    """H as circulant coefficients c_o with y_e = sum_o c_o z_{(e+o) mod D}.
+    Valid when the hub graph + weights make H circulant (ring or complete
+    with uniform hub weights) — checked here at trace time."""
+    h = np.asarray(st.h)
+    d = h.shape[0]
+    c = h[:, 0]                                   # c_o = H[o, 0]
+    want = np.empty_like(h)
+    for e in range(d):
+        for o in range(d):
+            want[(e + o) % d, e] = c[o]
+    if not np.allclose(want, h, atol=1e-9):
+        raise ValueError("mixing='ppermute' needs a circulant H (ring or "
+                         "complete hub graph with uniform hub weights)")
+    return c
+
+
+def hub_average_ppermute(stacked: PyTree, st: MLLState,
+                         mix_dtype: str | None = None) -> PyTree:
+    """Beyond-paper: circulant-H hub mixing as a sum of rolls along the
+    (pod-sharded) hub axis.  Each nonzero coefficient lowers to a
+    collective-permute of one hub model instead of the all-gather the dense
+    D x D contraction needs — DCN bytes scale with the graph DEGREE, not D."""
+    d, nd = _grouped_dims(st)
+    v = st.v_weights.reshape(d, nd)
+    coeffs = _circulant_coeffs(st)
+
+    def mix(x):
+        xm = x.astype(mix_dtype) if mix_dtype else x
+        xg = xm.reshape((d, nd) + x.shape[1:])
+        z = jnp.einsum("dn,dn...->d...", v.astype(xm.dtype), xg)
+        y = None
+        for o, c in enumerate(coeffs):
+            if abs(float(c)) < 1e-12:
+                continue                     # non-neighbour: no traffic
+            zo = jnp.roll(z, -o, axis=0) if o else z
+            term = jnp.asarray(c, zo.dtype) * zo
+            y = term if y is None else y + term
+        out = jnp.broadcast_to(y[:, None], xg.shape).reshape(x.shape)
+        return out.astype(x.dtype)
+    return jax.tree.map(mix, stacked)
+
+
+def hub_average_int8(stacked: PyTree, st: MLLState) -> PyTree:
+    """Beyond-paper: int8-quantized hub mixing over circulant H.
+
+    The subnet average stays full precision (ICI is cheap); neighbour hub
+    models cross the pod boundary as int8 + one f32 scale per hub model.
+    Structured as coefficient-weighted ROLLS (like ppermute mixing) rather
+    than an einsum: a contraction over the pod-sharded hub dim would make
+    GSPMD all-reduce f32 partial sums — the rolls guarantee the wire
+    carries the int8 buffers (collective-permute of int8), halving DCN
+    bytes vs bf16.  Quantization error is symmetric per-tensor
+    (<= scale/2 per element); the ``int8_ef`` strategy removes the residual
+    bias with error feedback."""
+    d, nd = _grouped_dims(st)
+    v = st.v_weights.reshape(d, nd)
+    coeffs = _circulant_coeffs(st)
+
+    def mix(x):
+        xg = x.astype(jnp.float32).reshape((d, nd) + x.shape[1:])
+        z = jnp.einsum("dn,dn...->d...", v, xg)            # hub models (f32)
+        q, scale = _int8_quantize(z, tuple(range(1, z.ndim)))
+        y = None
+        for o, c in enumerate(coeffs):
+            if abs(float(c)) < 1e-12:
+                continue
+            if o:
+                qo = jnp.roll(q, -o, axis=0)               # int8 on the wire
+                so = jnp.roll(scale, -o, axis=0)
+                term = float(c) * (qo.astype(jnp.float32) * so)
+            else:
+                term = float(c) * z                        # own model exact
+            y = term if y is None else y + term
+        out = jnp.broadcast_to(y[:, None], (d, nd) + x.shape[1:])
+        return out.reshape(x.shape).astype(x.dtype)
+    return jax.tree.map(mix, stacked)
+
+
+def init_error_feedback(stacked_params: PyTree) -> PyTree:
+    """Residual state for error-feedback int8 mixing (one buffer per worker,
+    same layout/sharding as the params)."""
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
+                        stacked_params)
+
+
+def hub_average_int8_ef(stacked: PyTree, ef: PyTree, st: MLLState,
+                        ) -> tuple[PyTree, PyTree]:
+    """int8 hub mixing WITH error feedback: the quantization residual of
+    each hub round is added back before the next round's quantization, so
+    the long-run averaging is unbiased (Karimireddy et al. 2019 style).
+
+    Returns (mixed params, new residual state).  Wire format identical to
+    `hub_average_int8` (int8 rolls); only local state is added."""
+    d, nd = _grouped_dims(st)
+    v = st.v_weights.reshape(d, nd)
+    coeffs = _circulant_coeffs(st)
+
+    def mix(x, e):
+        xg = x.astype(jnp.float32).reshape((d, nd) + x.shape[1:])
+        eg = e.reshape((d, nd) + x.shape[1:])
+        z = jnp.einsum("dn,dn...->d...", v, xg + eg)      # compensated avg
+        q, scale = _int8_quantize(z, tuple(range(1, z.ndim)))
+        deq_own = q.astype(jnp.float32) * scale
+        resid = z - deq_own                                # what the wire lost
+        y = None
+        for o, c in enumerate(coeffs):
+            if abs(float(c)) < 1e-12:
+                continue
+            if o:
+                qo = jnp.roll(q, -o, axis=0)               # int8 on the wire
+                so = jnp.roll(scale, -o, axis=0)
+                term = float(c) * (qo.astype(jnp.float32) * so)
+            else:
+                term = float(c) * deq_own
+            y = term if y is None else y + term
+        out = jnp.broadcast_to(y[:, None], (d, nd) + x.shape[1:])
+        # every worker carries the FULL hub residual: the next round's
+        # v-weighted average (weights sum to 1 within a subnet) then returns
+        # exactly `resid`, so compensation is complete — dividing by nd here
+        # would feed back only 1/nd of the error per round
+        new_e = jnp.broadcast_to(resid[:, None], (d, nd) + x.shape[1:])
+        return (out.reshape(x.shape).astype(x.dtype),
+                new_e.reshape(x.shape).astype(jnp.float32))
+
+    pairs = jax.tree.map(mix, stacked, ef)
+    first = jax.tree.map(lambda t: t[0], pairs,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    second = jax.tree.map(lambda t: t[1], pairs,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return first, second
+
+
+# ------------------------------------------------------------------- registry
+class MixingStrategy:
+    """How subnet (V) and hub (Z) averaging rounds are realised.
+
+    Stateless strategies implement ``subnet(stacked, st)`` and
+    ``hub(stacked, st)``.  Stateful strategies (error feedback, ...) also
+    override ``init_state`` and the ``*_with_state`` variants — the engine
+    always calls the ``*_with_state`` forms so state threads uniformly
+    through ``lax.switch``.
+    """
+    name: str = "?"
+
+    def __init__(self, mix_dtype: str | None = None):
+        self.mix_dtype = mix_dtype
+
+    # ---- stateless interface
+    def subnet(self, stacked: PyTree, st: MLLState) -> PyTree:
+        raise NotImplementedError
+
+    def hub(self, stacked: PyTree, st: MLLState) -> PyTree:
+        raise NotImplementedError
+
+    # ---- state threading (override for stateful strategies)
+    def init_state(self, stacked_params: PyTree) -> PyTree:
+        return ()
+
+    def subnet_with_state(self, stacked: PyTree, st: MLLState,
+                          state: PyTree) -> tuple[PyTree, PyTree]:
+        return self.subnet(stacked, st), state
+
+    def hub_with_state(self, stacked: PyTree, st: MLLState,
+                       state: PyTree) -> tuple[PyTree, PyTree]:
+        return self.hub(stacked, st), state
+
+
+MIXING_REGISTRY: dict[str, type[MixingStrategy]] = {}
+
+
+def register(name: str) -> Callable[[type[MixingStrategy]], type[MixingStrategy]]:
+    """Class decorator: make a MixingStrategy reachable as MLLConfig(mixing=name)."""
+    def deco(cls: type[MixingStrategy]) -> type[MixingStrategy]:
+        cls.name = name
+        MIXING_REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def get_mixing(name: str, mix_dtype: str | None = None) -> MixingStrategy:
+    try:
+        cls = MIXING_REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown mixing {name!r}; registered strategies: "
+                         f"{available_mixing()}") from None
+    return cls(mix_dtype)
+
+
+def available_mixing() -> tuple[str, ...]:
+    return tuple(sorted(MIXING_REGISTRY))
+
+
+@register("dense")
+class DenseMixing(MixingStrategy):
+    """The paper's matrices verbatim: X V and X Z as W x W einsums.  Works
+    for unequal-size sub-networks; GSPMD lowers the worker-axis contraction
+    to data/pod collectives."""
+
+    def subnet(self, stacked, st):
+        return subnet_average_dense(stacked, st, self.mix_dtype)
+
+    def hub(self, stacked, st):
+        return hub_average_dense(stacked, st, self.mix_dtype)
+
+
+@register("two_stage")
+class TwoStageMixing(MixingStrategy):
+    """Structured V/Z: within-pod replica-group all-reduce + small D x D
+    hub mix instead of one dense W x W contraction."""
+
+    def subnet(self, stacked, st):
+        return subnet_average_two_stage(stacked, st, self.mix_dtype)
+
+    def hub(self, stacked, st):
+        return hub_average_two_stage(stacked, st, self.mix_dtype)
+
+
+@register("ppermute")
+class PPermuteMixing(TwoStageMixing):
+    """Circulant-H hub mixing as coefficient-weighted rolls: DCN bytes scale
+    with hub-graph degree, not D.  Subnet rounds stay two-stage."""
+
+    def hub(self, stacked, st):
+        return hub_average_ppermute(stacked, st, self.mix_dtype)
+
+
+@register("int8")
+class Int8Mixing(TwoStageMixing):
+    """ppermute wire format with int8-quantized hub models (biased).
+
+    ``mix_dtype`` applies to the SUBNET rounds only (inherited two_stage);
+    the hub wire format is int8 + f32 scales by definition."""
+
+    def hub(self, stacked, st):
+        return hub_average_int8(stacked, st)
+
+
+@register("int8_ef")
+class Int8EFMixing(TwoStageMixing):
+    """int8 hub mixing + error feedback: per-worker f32 residual buffers
+    make the long-run averaging unbiased.  Stateful — the engine carries the
+    residuals next to the params (same worker layout/sharding).  As with
+    ``int8``, ``mix_dtype`` affects subnet rounds only."""
+
+    def init_state(self, stacked_params):
+        return init_error_feedback(stacked_params)
+
+    def hub(self, stacked, st):
+        out, _ = hub_average_int8_ef(stacked, init_error_feedback(stacked), st)
+        return out
+
+    def hub_with_state(self, stacked, st, state):
+        if isinstance(state, tuple) and not state:   # caller without state
+            state = init_error_feedback(stacked)
+        return hub_average_int8_ef(stacked, state, st)
+
+
+# ------------------------------------------------------------ engine: mixing
+def schedule_mix(strategy: MixingStrategy, stacked: PyTree, mix_state: PyTree,
+                 step: jnp.ndarray, st: MLLState, tau: int, q: int, *,
+                 static_phase: int | None = None) -> tuple[PyTree, PyTree]:
+    """Apply T_k for this step via lax.switch (all branches lowered -> the
+    dry-run HLO exposes every collective the protocol ever issues).  Returns
+    (mixed params, new mixing state).
+
+    An empty-tuple ``mix_state`` (the stateless placeholder) is normalized
+    through ``strategy.init_state`` first, so every lax.switch branch
+    returns the same state structure even for stateful strategies."""
+    if isinstance(mix_state, tuple) and not mix_state:
+        mix_state = strategy.init_state(stacked)
+    branches = [
+        lambda p, s: (p, s),
+        lambda p, s: strategy.subnet_with_state(p, st, s),
+        lambda p, s: strategy.hub_with_state(p, st, s),
+    ]
+    if static_phase is not None:
+        # trace-time pinned branch: the dry-run lowers each phase separately
+        # so the roofline analysis gets exact per-phase costs
+        return branches[static_phase](stacked, mix_state)
+    ph = phase_of(step, tau, q)
+    return jax.lax.switch(ph, branches, stacked, mix_state)
+
+
+# --------------------------------------------------- engine: gated inner opt
+def init_gated_opt_state(optimizer: optim_mod.Optimizer,
+                         stacked_params: PyTree) -> PyTree:
+    """Inner-optimizer state wrapped with engine-owned per-worker step
+    counts: ``{"inner": optimizer state, "counts": (W,) int32}``.  The
+    counts feed the optimizer's ``step`` argument, so schedules like the
+    adamw bias correction advance per ACTUAL update, not per global tick."""
+    w = jax.tree.leaves(stacked_params)[0].shape[0]
+    return {"inner": optimizer.init(stacked_params),
+            "counts": jnp.zeros((w,), jnp.int32)}
+
+
+def gated_inner_update(optimizer: optim_mod.Optimizer, stacked: PyTree,
+                       opt_state: PyTree, grads: PyTree, theta: jnp.ndarray,
+                       ) -> tuple[PyTree, PyTree]:
+    """Bernoulli-gated inner-optimizer step on the worker axis (Eq. 2/3
+    generalised): a gated-off worker keeps params, optimizer state AND its
+    step count frozen — exactly as if it never computed the gradient.
+    ``opt_state`` comes from `init_gated_opt_state`."""
+    gate = theta != 0
+    counts = opt_state["counts"] + gate.astype(jnp.int32)
+    new_p, new_inner = optimizer.update(grads, opt_state["inner"], stacked,
+                                        counts)
+
+    def sel(new, old):
+        g = gate.reshape(gate.shape + (1,) * (new.ndim - 1))
+        return jnp.where(g, new, old.astype(new.dtype))
+
+    params = jax.tree.map(sel, new_p, stacked)
+    inner = jax.tree.map(sel, new_inner, opt_state["inner"])
+    return params, {"inner": inner, "counts": counts}
+
+
+def resolve_inner_optimizer(cfg) -> optim_mod.Optimizer:
+    """Inner optimizer from any config carrying (inner_opt, inner_opt_args, eta)."""
+    name = getattr(cfg, "inner_opt", "sgd")
+    args = dict(getattr(cfg, "inner_opt_args", ()) or ())
+    return optim_mod.get(name, cfg.eta, **args)
+
+
+def resolve_mixing(cfg) -> MixingStrategy:
+    """Mixing strategy from any config carrying (mixing, mix_dtype)."""
+    return get_mixing(cfg.mixing, getattr(cfg, "mix_dtype", None))
+
+
+# --------------------------------------------------------- engine: full step
+class MLLTrainState(NamedTuple):
+    """Everything a protocol run carries between ticks, worker axis leading.
+
+    ``step`` counts completed ticks (0-based; tick k+1 is the paper's
+    1-based step), so ``phase_of(state.step)`` after a step tells which
+    operator was just applied."""
+    params: PyTree       # stacked params, leading worker axis on every leaf
+    opt_state: PyTree    # gated inner-opt state: {"inner": ..., "counts": (W,)}
+    mix_state: PyTree    # per-strategy mixing state (() when stateless)
+    step: jnp.ndarray    # scalar int32: completed ticks
+
+
+def init_train_state(stacked_params: PyTree,
+                     optimizer: optim_mod.Optimizer | None = None,
+                     strategy: MixingStrategy | None = None, *,
+                     cfg=None) -> MLLTrainState:
+    """Fresh protocol state.  Pass (optimizer, strategy) explicitly or a
+    config (MLLConfig-like) to resolve them from."""
+    if optimizer is None:
+        optimizer = resolve_inner_optimizer(cfg)
+    if strategy is None:
+        strategy = resolve_mixing(cfg)
+    return MLLTrainState(
+        params=stacked_params,
+        opt_state=init_gated_opt_state(optimizer, stacked_params),
+        mix_state=strategy.init_state(stacked_params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def protocol_step(state: MLLTrainState, grads: PyTree, cfg, st: MLLState, *,
+                  optimizer: optim_mod.Optimizer | None = None,
+                  strategy: MixingStrategy | None = None,
+                  static_phase: int | None = None) -> MLLTrainState:
+    """One full protocol tick: gate, inner-optimizer update, scheduled mixing.
+
+    `grads` are per-worker minibatch gradients with the worker axis leading
+    on every leaf.  With ``sgd`` + a stateless strategy this reduces
+    bit-for-bit to the legacy ``mll_train_step``.
+    """
+    if optimizer is None:
+        optimizer = resolve_inner_optimizer(cfg)
+    if strategy is None:
+        strategy = resolve_mixing(cfg)
+    step = state.step.astype(jnp.int32) + 1
+    theta = gate_sample(cfg.seed, step, st.rates)
+    params, opt_state = gated_inner_update(optimizer, state.params,
+                                           state.opt_state, grads, theta)
+    params, mix_state = schedule_mix(strategy, params, state.mix_state, step,
+                                     st, cfg.tau, cfg.q,
+                                     static_phase=static_phase)
+    return MLLTrainState(params, opt_state, mix_state, step)

@@ -2,8 +2,22 @@
 
 All N worker replicas are carried as a stacked leading axis on every param
 leaf; per-worker minibatch gradients are computed with `jax.vmap`, gradient
-gating theta_k^i ~ Bernoulli(p_i) follows Eq. (3), and the averaging operator
-T_k in {I, V, Z} is applied with one einsum per leaf.
+gating theta_k^i ~ Bernoulli(p_i) follows Eq. (3), and the scheduled
+averaging round is applied through the **protocol engine**
+(`repro.core.protocol`): the same pluggable mixing-strategy registry and
+gated inner-optimizer update that drive the production mesh trainer.
+
+Config knobs (SimConfig):
+
+  * ``mixing``    — any registered strategy ("dense" reproduces the paper's
+                    X T_k matrix form exactly; unequal-size sub-networks
+                    require "dense").
+  * ``inner_opt`` — any `repro.optim.optimizers` optimizer; per-worker state
+                    rides the scan carry and is frozen for gated-off workers.
+  * ``kernel``    — "xla" (default) or "pallas": the fused update+mix
+                    Pallas kernel (`kernels/hier_mix.py`) replaces the
+                    unfused gated-SGD + dense-operator pair (interpret mode
+                    off-TPU; requires inner_opt="sgd" and mixing="dense").
 
 This module is the reference implementation used by the paper-figure
 benchmarks and by the equivalence tests against the production collective
@@ -19,6 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.hierarchy import MLLSchedule, MultiLevelNetwork
+from repro.core import protocol
+from repro.optim import optimizers as optim_mod
 
 PyTree = Any
 
@@ -45,6 +61,11 @@ class SimConfig:
     eta: float = 0.05
     batch_size: int = 32
     eval_every: int = 32          # matches the paper: metrics every 32 iterations
+    mixing: str = "dense"         # any registered mixing strategy
+    mix_dtype: str | None = None
+    inner_opt: str = "sgd"        # any repro.optim.optimizers optimizer
+    inner_opt_args: tuple = ()    # ((key, value), ...) extra kwargs
+    kernel: str = "xla"           # "xla" | "pallas" (fused update+mix)
 
 
 @dataclasses.dataclass
@@ -65,28 +86,56 @@ def _phase_ids(network: MultiLevelNetwork, schedule: MLLSchedule, k0: int, num: 
     return ids
 
 
+def _sim_optimizer(cfg: SimConfig) -> optim_mod.Optimizer:
+    return protocol.resolve_inner_optimizer(cfg)
+
+
+def _sim_strategy(cfg: SimConfig) -> protocol.MixingStrategy:
+    return protocol.resolve_mixing(cfg)
+
+
+def _check_kernel(cfg: SimConfig) -> None:
+    if cfg.kernel not in ("xla", "pallas"):
+        raise ValueError(f"unknown kernel {cfg.kernel!r}; expected xla|pallas")
+    if cfg.kernel == "pallas" and (cfg.inner_opt != "sgd"
+                                   or cfg.mixing != "dense"
+                                   or cfg.mix_dtype is not None):
+        raise ValueError("kernel='pallas' fuses the plain-SGD update with the "
+                         "dense f32 operator contraction; it requires "
+                         "inner_opt='sgd', mixing='dense', and mix_dtype=None")
+
+
 def make_step_fn(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
                  network: MultiLevelNetwork,
                  cfg: SimConfig):
-    """Build the jitted scan body.
+    """Build the jitted scan body over the protocol engine.
 
     loss_fn(params, batch) -> scalar; batch is a pytree whose leaves have a
     leading sample axis.  Per-worker data is a pytree with leading axes
-    (num_workers, samples_per_worker, ...).
+    (num_workers, samples_per_worker, ...).  The returned function has
+    signature
+
+      scan_steps(carry, data, op_ids) -> carry
+
+    where ``carry = (stacked, opt_state, mix_state, key)`` (see
+    `init_sim_carry`).
     """
+    _check_kernel(cfg)
     n = network.num_workers
     p_rates = jnp.asarray(network.worker_rates, dtype=jnp.float32)
-    operators = jnp.stack([
-        jnp.eye(n, dtype=jnp.float32),
-        jnp.asarray(network.v_matrix(), dtype=jnp.float32),
-        jnp.asarray(network.z_matrix(), dtype=jnp.float32),
-    ])
+    st = protocol.state_from_network(network)
+    optimizer = _sim_optimizer(cfg)
+    strategy = _sim_strategy(cfg)
+    if cfg.kernel == "pallas":
+        # the fused kernel consumes the dense operator directly
+        operators = jnp.stack([jnp.eye(n, dtype=jnp.float32),
+                               st.v_op, st.z_op])
     grad_fn = jax.grad(loss_fn)
 
     @jax.jit
-    def scan_steps(stacked, key, data, op_ids):
+    def scan_steps(carry, data, op_ids):
         def body(carry, op_id):
-            stacked, key = carry
+            stacked, opt_state, mix_state, key = carry
             key, kb, kg = jax.random.split(key, 3)
             wkeys = jax.random.split(kb, n)
 
@@ -99,19 +148,33 @@ def make_step_fn(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
             grads = jax.vmap(worker_grad)(stacked, data, wkeys)
             theta = (jax.random.uniform(kg, (n,)) < p_rates).astype(jnp.float32)
 
-            def upd(x, g):
-                gate = theta.reshape((n,) + (1,) * (g.ndim - 1))
-                return x - cfg.eta * gate * g
+            if cfg.kernel == "pallas":
+                from repro.kernels import ops as kops
+                t = operators[op_id]
+                stacked = kops.hier_mix_pytree(stacked, grads, t, theta,
+                                               cfg.eta)
+            else:
+                stacked, opt_state = protocol.gated_inner_update(
+                    optimizer, stacked, opt_state, grads, theta)
+                stacked, mix_state = jax.lax.switch(op_id, [
+                    lambda p, s: (p, s),
+                    lambda p, s: strategy.subnet_with_state(p, st, s),
+                    lambda p, s: strategy.hub_with_state(p, st, s),
+                ], stacked, mix_state)
+            return (stacked, opt_state, mix_state, key), None
 
-            stacked = jax.tree.map(upd, stacked, grads)
-            t = operators[op_id]
-            stacked = apply_operator(stacked, t)
-            return (stacked, key), None
-
-        (stacked, key), _ = jax.lax.scan(body, (stacked, key), op_ids)
-        return stacked, key
+        carry, _ = jax.lax.scan(body, carry, op_ids)
+        return carry
 
     return scan_steps
+
+
+def init_sim_carry(stacked: PyTree, cfg: SimConfig, seed: int = 0):
+    """(params, gated inner-opt state, mixing state, PRNG key)."""
+    optimizer = _sim_optimizer(cfg)
+    strategy = _sim_strategy(cfg)
+    return (stacked, protocol.init_gated_opt_state(optimizer, stacked),
+            strategy.init_state(stacked), jax.random.PRNGKey(seed))
 
 
 def simulate(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
@@ -130,7 +193,7 @@ def simulate(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
     n = network.num_workers
     a = jnp.asarray(network.a, dtype=jnp.float32)
     stacked = replicate(init_params, n)
-    key = jax.random.PRNGKey(seed)
+    carry = init_sim_carry(stacked, cfg, seed)
     scan_steps = make_step_fn(loss_fn, network, cfg)
 
     eval_loss = jax.jit(loss_fn)
@@ -141,13 +204,13 @@ def simulate(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
     while done < steps:
         chunk = min(cfg.eval_every, steps - done)
         op_ids = jnp.asarray(_phase_ids(network, schedule, done, chunk))
-        stacked, key = scan_steps(stacked, key, worker_data, op_ids)
+        carry = scan_steps(carry, worker_data, op_ids)
         done += chunk
-        u = weighted_average(stacked, a)
+        u = weighted_average(carry[0], a)
         rec_steps.append(done)
         rec_loss.append(float(eval_loss(u, eval_data)))
         rec_acc.append(float(eval_acc(u, test_data)))
-    u = weighted_average(stacked, a)
+    u = weighted_average(carry[0], a)
     return SimResult(np.asarray(rec_steps), np.asarray(rec_loss),
                      np.asarray(rec_acc), u)
 

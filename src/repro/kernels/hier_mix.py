@@ -26,6 +26,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax <= 0.4.x ships the TPU compiler params as TPUCompilerParams; newer
+# releases renamed it to CompilerParams.  Accept either.
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+if _CompilerParams is None:
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams — unsupported jax version for the hier_mix kernel")
+
 
 def _kernel(x_ref, g_ref, t_ref, theta_ref, o_ref, *, eta: float):
     x = x_ref[...].astype(jnp.float32)
@@ -60,7 +69,7 @@ def hier_mix_chunks(x: jnp.ndarray, g: jnp.ndarray, t_op: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((w, block_c), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((w, cp), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x, g, t_op, theta[:, None])

@@ -38,6 +38,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import ArchConfig
 from repro.configs.registry import ARCH_IDS, get_config
 from repro.core.mllsgd import MLLConfig, build_network, build_state
+from repro.core.protocol import available_mixing
 from repro.launch import hlo_analysis as hlo
 from repro.launch.input_specs import (SHAPES, ShapeSpec, adapt_config,
                                       decode_input_specs, prefill_input_specs,
@@ -314,7 +315,7 @@ def main(argv=None):
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multipod", action="store_true")
     ap.add_argument("--phase", default="dynamic", choices=tuple(PHASES))
-    ap.add_argument("--mixing", default="dense", choices=("dense", "two_stage"))
+    ap.add_argument("--mixing", default="dense", choices=available_mixing())
     ap.add_argument("--mix-dtype", default=None)
     ap.add_argument("--remat", default="full", choices=("none", "full", "dots"))
     ap.add_argument("--impl", default="auto")

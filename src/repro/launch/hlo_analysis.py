@@ -246,6 +246,27 @@ _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 _OPERANDS_RE = re.compile(r"\(([^)]*)\)")
 
 
+def _split_operands(arglist: str) -> list[str]:
+    """Split an HLO operand list on top-level commas only: operand tokens
+    may carry inline types whose dims/layouts contain commas, e.g.
+    ``f32[32,64]{1,0} %lhs, f32[64,64]{1,0} %rhs``."""
+    out, depth, cur = [], 0, []
+    for ch in arglist:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    tail = "".join(cur).strip()
+    if tail:
+        out.append(tail)
+    return out
+
+
 def _dot_flops(op: Op, comp: Computation) -> float:
     """2 * prod(result) * prod(lhs contracting dims)."""
     shapes = _shape_dims(op.result_type)
@@ -256,17 +277,23 @@ def _dot_flops(op: Op, comp: Computation) -> float:
     if not cm:
         return 2.0 * out_elems  # degenerate
     cdims = [int(x) for x in cm.group(1).split(",") if x]
-    # first operand name inside dot(...)
+    # first operand inside dot(...): its inline type if present, else symtab
     pm = _OPERANDS_RE.search(op.line[op.line.find("dot("):])
     lhs_dims: tuple[int, ...] = ()
     if pm:
-        first = pm.group(1).split(",")[0].strip()
-        name = first.split()[-1].lstrip("%")
-        t = comp.symtab.get(name)
-        if t:
-            ds = _shape_dims(t)
-            if ds:
+        operands = _split_operands(pm.group(1))
+        if operands:
+            first = operands[0]
+            ds = _shape_dims(first)
+            if ds:                                  # inline "f32[32,64]{1,0} %x"
                 lhs_dims = ds[0][1]
+            else:
+                name = first.split()[-1].lstrip("%")
+                t = comp.symtab.get(name)
+                if t:
+                    ds = _shape_dims(t)
+                    if ds:
+                        lhs_dims = ds[0][1]
     contract = 1.0
     for d in cdims:
         if d < len(lhs_dims):
@@ -352,8 +379,7 @@ def _operand_names(op: Op) -> list[str]:
     if not pm:
         return []
     out = []
-    for tok in pm.group(1).split(","):
-        tok = tok.strip()
+    for tok in _split_operands(pm.group(1)):
         if tok:
             out.append(tok.split()[-1].lstrip("%"))
     return out

@@ -12,7 +12,12 @@ import math
 
 import jax
 from jax.experimental import mesh_utils
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5 requires explicit axis types; 0.4.x has implicit Auto only
+    from jax.sharding import AxisType
+except ImportError:
+    AxisType = None
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -26,6 +31,8 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
             "dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count"
             "=512 before importing jax")
     dev_mesh = mesh_utils.create_device_mesh(shape, devices[:n])
+    if AxisType is None:
+        return Mesh(dev_mesh, axes)
     return Mesh(dev_mesh, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 

@@ -23,11 +23,13 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
 from repro.core.mllsgd import MLLConfig, build_network, build_state
+from repro.core.protocol import available_mixing, init_train_state
 from repro.core.simulator import weighted_average
 from repro.data.pipeline import LMBatcher, make_token_stream
 from repro.models import model as model_mod
+from repro.optim import optimizers as optim_mod
 from repro.train import checkpoint
-from repro.train.train_step import loss_fn, mll_transformer_step
+from repro.train.train_step import loss_fn, mll_transformer_state_step
 
 PyTree = Any
 
@@ -71,7 +73,11 @@ def run_training(cfg: ArchConfig, mll: MLLConfig, loop: TrainLoopConfig,
     batcher = LMBatcher(stream, loop.seq_len, loop.batch_per_worker)
     rng = np.random.default_rng(loop.seed)
 
-    step_fn = jax.jit(partial(mll_transformer_step, cfg=cfg, mll=mll, st=st))
+    # full protocol state: inner-optimizer + mixing state ride along, so
+    # MLLConfig(inner_opt=..., mixing="int8_ef") runs end-to-end here
+    train_state = init_train_state(stacked, cfg=mll)
+    step_fn = jax.jit(partial(mll_transformer_state_step,
+                              cfg=cfg, mll=mll, st=st))
     a = jnp.asarray(network.a, jnp.float32)
     eval_fn = jax.jit(partial(loss_fn, cfg=cfg))
 
@@ -79,7 +85,8 @@ def run_training(cfg: ArchConfig, mll: MLLConfig, loop: TrainLoopConfig,
     t0 = time.time()
     for k in range(1, loop.steps + 1):
         batch = batcher.sample(rng)
-        stacked, metrics = step_fn(stacked, batch, jnp.asarray(k, jnp.int32))
+        train_state, metrics = step_fn(train_state, batch)
+        stacked = train_state.params
         if k % loop.eval_every == 0 or k == loop.steps:
             u = weighted_average(stacked, a)
             eb = batcher.sample(rng)
@@ -111,7 +118,9 @@ def main(argv=None):
     ap.add_argument("--q", type=int, default=4)
     ap.add_argument("--eta", type=float, default=0.05)
     ap.add_argument("--topology", default="complete")
-    ap.add_argument("--mixing", default="dense", choices=("dense", "two_stage"))
+    ap.add_argument("--mixing", default="dense", choices=available_mixing())
+    ap.add_argument("--inner-opt", default="sgd",
+                    choices=tuple(sorted(optim_mod.OPTIMIZERS)))
     ap.add_argument("--subnets", type=int, default=2)
     ap.add_argument("--workers-per-subnet", type=int, default=2)
     ap.add_argument("--seq-len", type=int, default=128)
@@ -125,7 +134,7 @@ def main(argv=None):
     rates = tuple(args.rates) if args.rates else 1.0
     mll = MLLConfig(tau=args.tau, q=args.q, eta=args.eta,
                     hub_topology=args.topology, mixing=args.mixing,
-                    worker_rates=rates)
+                    inner_opt=args.inner_opt, worker_rates=rates)
     loop = TrainLoopConfig(steps=args.steps, seq_len=args.seq_len,
                            batch_per_worker=args.batch,
                            checkpoint_dir=args.checkpoint_dir,

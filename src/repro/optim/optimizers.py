@@ -19,7 +19,9 @@ PyTree = Any
 class Optimizer(NamedTuple):
     init: Callable[[PyTree], PyTree]
     update: Callable[[PyTree, PyTree, PyTree, jnp.ndarray], tuple[PyTree, PyTree]]
-    # update(grads, state, params, step) -> (new_params, new_state)
+    # update(grads, state, params, step) -> (new_params, new_state);
+    # `step` is a scalar, or a vector aligned with every leaf's leading
+    # axis (the protocol engine passes per-worker update counts)
 
 
 def sgd(lr: float) -> Optimizer:
@@ -58,16 +60,24 @@ def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
         return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
 
     def update(grads, state, params, step):
-        t = step.astype(jnp.float32)
-        c1 = 1.0 - b1 ** t
-        c2 = 1.0 - b2 ** t
+        # `step` may be a scalar (shared clock) or a per-worker vector
+        # aligned with the leading axis of every leaf (the protocol engine
+        # passes per-worker ACTUAL update counts, so the bias correction of
+        # a Bernoulli-gated worker follows its own steps, not global ticks).
+        t = jnp.asarray(step).astype(jnp.float32)
+        # count 0 (never stepped) would give c=0; the engine discards that
+        # worker's update anyway, the guard just keeps the math finite
+        c1 = jnp.maximum(1.0 - b1 ** t, 1e-12)
+        c2 = jnp.maximum(1.0 - b2 ** t, 1e-12)
         new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
                              state["m"], grads)
         new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
                              state["v"], grads)
 
         def step_fn(p, m, v):
-            upd = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            c1l = c1.reshape(c1.shape + (1,) * (m.ndim - c1.ndim))
+            c2l = c2.reshape(c2.shape + (1,) * (v.ndim - c2.ndim))
+            upd = (m / c1l) / (jnp.sqrt(v / c2l) + eps)
             if weight_decay:
                 upd = upd + weight_decay * p.astype(jnp.float32)
             return p - jnp.asarray(lr, p.dtype) * upd.astype(p.dtype)
@@ -77,5 +87,13 @@ def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
     return Optimizer(init, update)
 
 
+OPTIMIZERS = {"sgd": sgd, "momentum": momentum, "adamw": adamw}
+
+
 def get(name: str, lr: float, **kw) -> Optimizer:
-    return {"sgd": sgd, "momentum": momentum, "adamw": adamw}[name](lr, **kw)
+    try:
+        factory = OPTIMIZERS[name]
+    except KeyError:
+        raise ValueError(f"unknown optimizer {name!r}; known: "
+                         f"{tuple(sorted(OPTIMIZERS))}") from None
+    return factory(lr, **kw)

@@ -5,8 +5,16 @@ The full MLL-SGD production tick is:
   1. each worker computes grads on its own minibatch (vmap over the worker
      axis; `spmd_axis_name` threads the mesh axes through internal sharding
      constraints),
-  2. the Bernoulli-gated SGD update (paper Eq. 2-3),
-  3. the scheduled averaging operator T_k (core.mllsgd.apply_schedule).
+  2. the Bernoulli-gated inner-optimizer update (paper Eq. 2-3; plain SGD
+     by default, any `repro.optim.optimizers` optimizer via
+     ``MLLConfig(inner_opt=...)``),
+  3. the scheduled averaging round through the mixing-strategy registry
+     (`core.protocol`).
+
+`mll_transformer_step` is the stateless fast path (sgd + stateless mixing);
+`mll_transformer_state_step` carries a full `MLLTrainState` so stateful
+inner optimizers (momentum/adamw) and stateful mixing (int8_ef error
+feedback) run end-to-end on the production mesh.
 
 No gradient collective crosses the worker axis during local steps — that is
 the paper's communication saving, visible directly in the dry-run HLO.
@@ -22,6 +30,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core.mllsgd import MLLConfig, MLLState, apply_schedule, gate_sample, gated_sgd_update
+from repro.core.protocol import MLLTrainState, protocol_step
 from repro.models import model as model_mod
 from repro.models.pjit_utils import constraint
 
@@ -115,7 +124,9 @@ def mll_transformer_step(stacked_params: PyTree, batch: dict,
                          spmd_axis_name=None, impl: str = "xla",
                          remat: str = "none", microbatch: int = 1,
                          static_phase: int | None = None) -> tuple[PyTree, dict]:
-    """One production MLL-SGD tick over the whole worker fleet."""
+    """One production MLL-SGD tick over the whole worker fleet (stateless
+    fast path: plain gated SGD + the registered mixing strategy run with
+    fresh per-round state)."""
     grads, metrics = per_worker_grads(stacked_params, batch, cfg,
                                       spmd_axis_name=spmd_axis_name,
                                       impl=impl, remat=remat,
@@ -125,3 +136,24 @@ def mll_transformer_step(stacked_params: PyTree, batch: dict,
     stacked = gated_sgd_update(stacked_params, grads, theta, mll.eta)
     stacked = apply_schedule(stacked, step, mll, st, static_phase=static_phase)
     return stacked, metrics
+
+
+def mll_transformer_state_step(train_state: MLLTrainState, batch: dict,
+                               cfg: ArchConfig, mll: MLLConfig,
+                               st: MLLState, *, spmd_axis_name=None,
+                               impl: str = "xla", remat: str = "none",
+                               microbatch: int = 1,
+                               static_phase: int | None = None,
+                               ) -> tuple[MLLTrainState, dict]:
+    """One production protocol tick carrying full `MLLTrainState`: the
+    configured inner optimizer's per-worker state and the mixing strategy's
+    state (e.g. int8_ef residuals) thread through the step.  The tick index
+    lives in ``train_state.step``."""
+    grads, metrics = per_worker_grads(train_state.params, batch, cfg,
+                                      spmd_axis_name=spmd_axis_name,
+                                      impl=impl, remat=remat,
+                                      microbatch=microbatch,
+                                      accum_dtype=mll.accum_dtype)
+    new_state = protocol_step(train_state, grads, mll, st,
+                              static_phase=static_phase)
+    return new_state, metrics

@@ -1,6 +1,10 @@
 """Propositions 1-4 of the paper for the V/Z operators, the T_k schedule,
 and the u_k invariant (Eq. 10) — the backbone of the convergence analysis."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -e .[dev])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.hierarchy import MLLSchedule, MultiLevelNetwork

@@ -1,0 +1,392 @@
+"""Protocol engine: mixing-strategy registry, gated inner optimizers, and
+the unified step — including the bit-for-bit reduction to the pre-refactor
+``mll_train_step`` (sgd + stateless mixing) and the simulator's Pallas
+backend."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import protocol
+from repro.core.hierarchy import MLLSchedule, MultiLevelNetwork
+from repro.core.mllsgd import (MLLConfig, apply_schedule,
+                               apply_schedule_with_state, build_network,
+                               build_state, gate_sample, gated_sgd_update,
+                               hub_average_dense, mll_train_step)
+from repro.core.outer import OuterConfig, init_outer_state, outer_hub_step
+from repro.core.protocol import (MLLTrainState, MixingStrategy,
+                                 available_mixing, get_mixing,
+                                 init_train_state, protocol_step, register,
+                                 state_from_network)
+from repro.core.simulator import (SimConfig, apply_operator, replicate,
+                                  simulate, weighted_average)
+from repro.data.pipeline import make_classification
+from repro.optim import optimizers
+
+
+def _setup(n_pods=2, data=3, rates=(1.0, 0.5, 0.9, 1.0, 0.3, 0.7),
+           tau=2, q=2, **cfg_kw):
+    cfg = MLLConfig(tau=tau, q=q, eta=0.1, granularity="worker_per_data",
+                    hub_topology="ring", worker_rates=rates, **cfg_kw)
+    net = build_network(cfg, n_pods, data)
+    st = build_state(cfg, net)
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (5, 4)),
+              "b": jax.random.normal(key, (4,))}
+    stacked = replicate(params, net.num_workers)
+    stacked = jax.tree.map(
+        lambda x: x + 0.01 * jax.random.normal(
+            jax.random.fold_in(key, x.ndim), x.shape), stacked)
+    return cfg, net, st, stacked
+
+
+def _random_grads(stacked, key):
+    return jax.tree.map(
+        lambda x: jax.random.normal(jax.random.fold_in(key, x.size), x.shape),
+        stacked)
+
+
+# ------------------------------------------------------------------- registry
+def test_registry_contents_and_lookup():
+    assert set(available_mixing()) >= {"dense", "two_stage", "ppermute",
+                                       "int8", "int8_ef"}
+    s = get_mixing("dense", "bfloat16")
+    assert s.name == "dense" and s.mix_dtype == "bfloat16"
+    with pytest.raises(ValueError, match="unknown mixing"):
+        get_mixing("nope")
+
+
+def test_register_decorator_extends_every_path():
+    """A freshly registered strategy is immediately reachable from
+    MLLConfig + apply_schedule — the ~50-line extension claim."""
+    @register("_test_lazy")
+    class LazyMixing(MixingStrategy):
+        """Hub rounds degrade to subnet averaging (never cross pods)."""
+        def subnet(self, stacked, st):
+            return protocol.subnet_average_dense(stacked, st, self.mix_dtype)
+
+        def hub(self, stacked, st):
+            return protocol.subnet_average_dense(stacked, st, self.mix_dtype)
+
+    try:
+        cfg, net, st, stacked = _setup(mixing="_test_lazy")
+        got = apply_schedule(stacked, jnp.asarray(4), cfg, st)     # hub phase
+        want = protocol.subnet_average_dense(stacked, st)
+        for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
+            np.testing.assert_allclose(a, b, atol=1e-6)
+    finally:
+        del protocol.MIXING_REGISTRY["_test_lazy"]
+
+
+def test_mllconfig_validates_protocol_points():
+    with pytest.raises(ValueError, match="granularity"):
+        MLLConfig(granularity="nope")
+    # worker_per_chip is a documented granularity, not a silent alias
+    assert MLLConfig(granularity="worker_per_chip").granularity == "worker_per_chip"
+    with pytest.raises(ValueError, match="mixing"):
+        MLLConfig(mixing="nope")
+    with pytest.raises(ValueError, match="inner_opt"):
+        MLLConfig(inner_opt="nope")
+
+
+# ------------------------------------------------- bit-for-bit reduction
+def test_protocol_step_bitwise_equals_legacy_trajectory():
+    """sgd + dense mixing through the engine reproduces the pre-refactor
+    mll_train_step trajectory BIT-FOR-BIT on a fixed seed: the gated
+    where-select equals the multiplicative gate, and the dense strategy is
+    the paper's matrix operators."""
+    cfg, net, st, stacked = _setup()
+    optimizer = optimizers.sgd(cfg.eta)
+    strategy = get_mixing("dense")
+    state = init_train_state(stacked, optimizer, strategy)
+    legacy = jax.tree.map(lambda x: x, stacked)
+
+    v_mat = jnp.asarray(net.v_matrix(), jnp.float32)
+    z_mat = jnp.asarray(net.z_matrix(), jnp.float32)
+    key = jax.random.PRNGKey(42)
+    for k in range(1, 2 * cfg.tau * cfg.q + 4):
+        key = jax.random.fold_in(key, k)
+        grads = _random_grads(legacy, key)
+        # pre-refactor reference: multiplicative gate + explicit T_k matrix
+        theta = gate_sample(cfg.seed, jnp.asarray(k), st.rates)
+        upd = gated_sgd_update(legacy, grads, theta, cfg.eta)
+        if k % (cfg.q * cfg.tau) == 0:
+            legacy = apply_operator(upd, z_mat)
+        elif k % cfg.tau == 0:
+            legacy = apply_operator(upd, v_mat)
+        else:
+            legacy = upd
+        state = protocol_step(state, grads, cfg, st,
+                              optimizer=optimizer, strategy=strategy)
+        for a, b in zip(jax.tree.leaves(legacy), jax.tree.leaves(state.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(state.step) == 2 * cfg.tau * cfg.q + 3
+
+
+def test_mll_train_step_matches_protocol_step():
+    """The legacy entry point and the engine agree step-for-step."""
+    cfg, net, st, stacked = _setup()
+    state = init_train_state(stacked, cfg=cfg)
+    legacy = stacked
+    key = jax.random.PRNGKey(7)
+    for k in range(1, 6):
+        grads = _random_grads(legacy, jax.random.fold_in(key, k))
+        legacy = mll_train_step(legacy, grads, jnp.asarray(k), cfg, st)
+        state = protocol_step(state, grads, cfg, st)
+        for a, b in zip(jax.tree.leaves(legacy), jax.tree.leaves(state.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------- gated inner opt
+@pytest.mark.parametrize("name", ["momentum", "adamw"])
+def test_gated_optimizer_freezes_gated_off_worker(name):
+    cfg, net, st, stacked = _setup(rates=(0.0001,) + (1.0,) * 5,
+                                   inner_opt=name)
+    # rate ~0 -> worker 0 essentially never steps; force it exactly off by
+    # driving the gate directly
+    optimizer = cfg.inner_optimizer()
+    opt_state = protocol.init_gated_opt_state(optimizer, stacked)
+    grads = _random_grads(stacked, jax.random.PRNGKey(3))
+    theta = jnp.asarray([0.0, 1.0, 1.0, 1.0, 1.0, 1.0])
+    new_p, new_s = protocol.gated_inner_update(
+        optimizer, stacked, opt_state, grads, theta)
+    for x0, x1 in zip(jax.tree.leaves(stacked), jax.tree.leaves(new_p)):
+        np.testing.assert_array_equal(np.asarray(x0)[0], np.asarray(x1)[0])
+        assert not np.allclose(np.asarray(x0)[1], np.asarray(x1)[1])
+    # optimizer state frozen for worker 0, moved for worker 1
+    for s0, s1 in zip(jax.tree.leaves(opt_state["inner"]),
+                      jax.tree.leaves(new_s["inner"])):
+        np.testing.assert_array_equal(np.asarray(s0)[0], np.asarray(s1)[0])
+        assert not np.allclose(np.asarray(s0)[1], np.asarray(s1)[1])
+    # per-worker step counts advance only for gated-on workers
+    np.testing.assert_array_equal(np.asarray(new_s["counts"]),
+                                  [0, 1, 1, 1, 1, 1])
+
+
+def test_adamw_bias_correction_uses_per_worker_counts():
+    """A worker whose first gradient lands late must get the FULL first-step
+    bias correction (c1 = 1-b1), exactly as if earlier ticks never
+    happened — not the decayed global-clock correction."""
+    cfg, net, st, stacked = _setup(rates=(1.0,) * 6, inner_opt="adamw",
+                                   tau=100, q=1)   # no mixing interference
+    optimizer = cfg.inner_optimizer()
+    grads = _random_grads(stacked, jax.random.PRNGKey(5))
+    gate_on = jnp.ones((6,))
+    gate_w0_off = jnp.asarray([0.0, 1.0, 1.0, 1.0, 1.0, 1.0])
+
+    # run A: worker 0 gated off for 9 ticks, then on
+    state = protocol.init_gated_opt_state(optimizer, stacked)
+    params = stacked
+    for _ in range(9):
+        params, state = protocol.gated_inner_update(optimizer, params, state,
+                                                    grads, gate_w0_off)
+    pa, _ = protocol.gated_inner_update(optimizer, params, state, grads,
+                                        gate_on)
+    # run B: worker 0's very first tick, same params/grads for worker 0
+    state_b = protocol.init_gated_opt_state(optimizer, stacked)
+    pb, _ = protocol.gated_inner_update(optimizer, stacked, state_b, grads,
+                                        gate_on)
+    for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+        np.testing.assert_allclose(np.asarray(a)[0], np.asarray(b)[0],
+                                   rtol=1e-6)
+
+
+def test_protocol_step_with_momentum_converges_on_quadratic():
+    cfg, net, st, stacked = _setup(inner_opt="momentum",
+                                   inner_opt_args=(("beta", 0.5),))
+    target = jnp.ones((5, 4))
+    state = init_train_state(stacked, cfg=cfg)
+    for k in range(1, 97):
+        grads = {"w": 2 * (state.params["w"] - target[None]),
+                 "b": 2 * state.params["b"]}
+        state = protocol_step(state, grads, cfg, st)
+    err = float(jnp.abs(state.params["w"] - target[None]).max())
+    assert err < 0.05, err
+
+
+# ------------------------------------------------------- stateful mixing
+def test_int8_ef_runs_through_apply_schedule_and_carries_state():
+    cfg, net, st, stacked = _setup(n_pods=4, data=2,
+                                   rates=(1.0,) * 8, mixing="int8_ef")
+    # state-free view works end-to-end (hub phase k=4)
+    out = apply_schedule(stacked, jnp.asarray(4), cfg, st)
+    want = hub_average_dense(stacked, st)
+    for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(out)):
+        aw = np.asarray(a, np.float32)
+        np.testing.assert_allclose(aw, np.asarray(b, np.float32),
+                                   atol=0.02 * np.abs(aw).max() + 1e-6)
+    # stateful view: the hub round leaves nonzero residuals behind
+    strategy = cfg.mixing_strategy()
+    mix0 = strategy.init_state(stacked)
+    out2, mix1 = apply_schedule_with_state(stacked, mix0, jnp.asarray(4),
+                                           cfg, st)
+    resid = sum(float(jnp.abs(x).sum()) for x in jax.tree.leaves(mix1))
+    assert resid > 0
+    # the stateless placeholder () is accepted with a DYNAMIC phase too:
+    # schedule_mix normalizes it so lax.switch branch structures agree
+    out3, mix3 = apply_schedule_with_state(stacked, (), jnp.asarray(1),
+                                           cfg, st)
+    for a, b in zip(jax.tree.leaves(stacked), jax.tree.leaves(out3)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # and protocol_step threads it (local step keeps it untouched)
+    opt0 = protocol.init_gated_opt_state(cfg.inner_optimizer(), stacked)
+    state = MLLTrainState(stacked, opt0, mix1, jnp.asarray(4, jnp.int32))
+    grads = _random_grads(stacked, jax.random.PRNGKey(1))
+    state2 = protocol_step(state, grads, cfg, st)
+    for a, b in zip(jax.tree.leaves(mix1), jax.tree.leaves(state2.mix_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_int8_ef_tracks_dense_better_than_plain_int8_via_engine():
+    """Iterated hub mixing through protocol_step (zero grads, tau=q=1 so
+    every tick is a hub round): error feedback must track the exact dense
+    iterate at least as well as plain int8."""
+    def run(mixing, rounds=6):
+        cfg, net, st, stacked = _setup(n_pods=4, data=2, rates=(1.0,) * 8,
+                                       tau=1, q=1, mixing=mixing)
+        state = init_train_state(stacked, cfg=cfg)
+        zeros = jax.tree.map(jnp.zeros_like, stacked)
+        x_exact = stacked
+        for _ in range(rounds):
+            state = protocol_step(state, zeros, cfg, st)
+            x_exact = hub_average_dense(x_exact, st)
+        return max(float(jnp.abs(a - b).max()) for a, b in
+                   zip(jax.tree.leaves(x_exact),
+                       jax.tree.leaves(state.params)))
+
+    assert run("int8_ef") <= run("int8") + 1e-6
+
+
+# ------------------------------------------------------------ outer + mixing
+def test_outer_composes_with_int8_mixing():
+    cfg, net, st, stacked = _setup(n_pods=4, data=2, rates=(1.0,) * 8,
+                                   mixing="int8")
+    outer = init_outer_state(stacked, cfg)
+    new, outer2 = outer_hub_step(stacked, outer, cfg, st,
+                                 OuterConfig(lr=1.0, beta=0.0))
+    want = protocol.hub_average_int8(stacked, st)
+    for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(new)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_outer_carries_int8_ef_residuals():
+    cfg, net, st, stacked = _setup(n_pods=4, data=2, rates=(1.0,) * 8,
+                                   mixing="int8_ef")
+    outer = init_outer_state(stacked, cfg)
+    _, outer2 = outer_hub_step(stacked, outer, cfg, st, OuterConfig())
+    resid = sum(float(jnp.abs(x).sum())
+                for x in jax.tree.leaves(outer2["mixing"]))
+    assert resid > 0
+    # legacy 1-arg init + a stateful strategy is a trap: residuals would be
+    # silently dropped each round — must raise instead
+    with pytest.raises(ValueError, match="stateful"):
+        outer_hub_step(stacked, init_outer_state(stacked), cfg, st,
+                       OuterConfig())
+
+
+# ------------------------------------------------------------- simulator
+def _sim_task(net, seed=0):
+    data = make_classification(net.num_workers, 64, dim=8, num_classes=3,
+                               test_size=64, seed=seed)
+
+    def loss_fn(p, b):
+        logits = b["x"] @ p["w"] + p["b"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, b["y"][:, None], axis=1)[:, 0]
+        return (lse - gold).mean()
+
+    def acc_fn(p, b):
+        pred = jnp.argmax(b["x"] @ p["w"] + p["b"], -1)
+        return (pred == b["y"]).astype(jnp.float32).mean()
+
+    init = {"w": jnp.zeros((8, 3)), "b": jnp.zeros((3,))}
+    return data, loss_fn, acc_fn, init
+
+
+def test_simulator_pallas_kernel_matches_xla():
+    from repro.core import baselines
+    net, sched = baselines.mll_sgd("ring", [2, 2], tau=2, q=2,
+                                   worker_rates=[1.0, 0.7, 0.9, 1.0])
+    data, loss_fn, acc_fn, init = _sim_task(net)
+
+    def run(kernel):
+        return simulate(loss_fn, acc_fn, init, data.worker_data(), data.full,
+                        data.test, net, sched, steps=12,
+                        cfg=SimConfig(eta=0.1, batch_size=8, eval_every=4,
+                                      kernel=kernel), seed=0)
+
+    r_xla, r_pal = run("xla"), run("pallas")
+    np.testing.assert_allclose(r_xla.train_loss, r_pal.train_loss, atol=1e-5)
+    for a, b in zip(jax.tree.leaves(r_xla.final_avg_params),
+                    jax.tree.leaves(r_pal.final_avg_params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_simulator_pallas_rejects_unsupported_combos():
+    from repro.core import baselines
+    net, sched = baselines.mll_sgd("ring", [2, 2], tau=2, q=2)
+    data, loss_fn, acc_fn, init = _sim_task(net)
+    for bad in (SimConfig(kernel="pallas", inner_opt="momentum"),
+                SimConfig(kernel="pallas", mixing="two_stage"),
+                SimConfig(kernel="warp")):
+        with pytest.raises(ValueError):
+            simulate(loss_fn, acc_fn, init, data.worker_data(), data.full,
+                     data.test, net, sched, steps=4, cfg=bad)
+
+
+def test_simulator_mixing_and_inner_opt_axes():
+    """two_stage matches dense on the simulator; momentum runs and learns."""
+    from repro.core import baselines
+    net, sched = baselines.mll_sgd("ring", [2, 2], tau=2, q=2)
+    data, loss_fn, acc_fn, init = _sim_task(net)
+
+    def run(**kw):
+        return simulate(loss_fn, acc_fn, init, data.worker_data(), data.full,
+                        data.test, net, sched, steps=16,
+                        cfg=SimConfig(eta=0.1, batch_size=8, eval_every=8,
+                                      **kw), seed=0)
+
+    r_dense, r_two = run(mixing="dense"), run(mixing="two_stage")
+    np.testing.assert_allclose(r_dense.train_loss, r_two.train_loss, atol=1e-4)
+    r_mom = run(inner_opt="momentum")
+    assert r_mom.train_loss[-1] < r_mom.train_loss[0]
+
+
+def test_simulator_unequal_subnets_require_dense():
+    from repro.core import baselines
+    net, sched = baselines.mll_sgd("ring", [3, 2], tau=2, q=2)
+    data, loss_fn, acc_fn, init = _sim_task(net)
+    # dense handles unequal sub-networks
+    r = simulate(loss_fn, acc_fn, init, data.worker_data(), data.full,
+                 data.test, net, sched, steps=8,
+                 cfg=SimConfig(eta=0.1, batch_size=8, eval_every=8))
+    assert np.isfinite(r.train_loss).all()
+    # grouped strategies raise a clear error at trace time
+    with pytest.raises(ValueError, match="equal-size"):
+        simulate(loss_fn, acc_fn, init, data.worker_data(), data.full,
+                 data.test, net, sched, steps=8,
+                 cfg=SimConfig(eta=0.1, batch_size=8, eval_every=8,
+                               mixing="two_stage"))
+
+
+def test_state_from_network_unequal_marks_grouping_unavailable():
+    net = MultiLevelNetwork.build("ring", [3, 2])
+    st = state_from_network(net)
+    assert st.workers_per_subnet == 0
+    stacked = replicate({"p": jnp.ones((4,))}, net.num_workers)
+    with pytest.raises(ValueError, match="equal-size"):
+        protocol.subnet_average_two_stage(stacked, st)
+
+
+# ------------------------------------------------------------- baselines
+def test_baseline_protocol_configs():
+    from repro.core import baselines
+    c = baselines.protocol_config("distributed_sgd")
+    assert c.tau == 1 and c.q == 1
+    c = baselines.protocol_config("hl_sgd", mixing="dense",
+                                  inner_opt="momentum")
+    assert c.hub_topology == "star" and c.inner_opt == "momentum"
+    with pytest.raises(ValueError):
+        baselines.protocol_config("nope")

@@ -2,6 +2,9 @@
 (paper Assumption 2 + the spectral facts Theorem 1 relies on)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -e .[dev])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.topology import (HubNetwork, adjacency, diffusion_matrix,
