@@ -4,9 +4,13 @@ pay the negative-binomial tail per synchronous round; MLL-SGD rounds always
 cost exactly tau slots.
 
 Setup mirrors the paper: 90% of workers p=0.9, 10% p=0.6.  Every algorithm
-runs the SAME simulator; the barrier-based ones convert gradient-step rounds
-to slots via `barrier_round_slots` (each round costs the max over workers of
-a NegBin(tau, p) sample), MLL-SGD via `mll_round_slots`.
+runs through the event-driven timeline engine (`repro.core.timeline`): the
+barrier-based ones under the `"barrier"` readiness policy (each round costs
+the max over workers of a NegBin(tau, p) draw — the legacy
+`barrier_round_slots` accounting, now produced by the engine itself),
+MLL-SGD under the `"deadline"` policy (every slot is a tick; slow workers
+just skip steps).  See `bench_timeline` for the overlapping-round /
+partial-gossip sweep the engine adds beyond this figure.
 """
 from __future__ import annotations
 
@@ -14,58 +18,54 @@ import time
 
 import numpy as np
 
-from benchmarks.common import BenchScale, emit, run_sim
+from benchmarks.common import DIM, CLASSES, BenchScale, emit, make_model
 from repro.core import baselines
 from repro.core.hierarchy import MLLSchedule
-from repro.core.simulator import barrier_round_slots, mll_round_slots
+from repro.core.simulator import SimConfig
+from repro.core.timeline import run_timeline
+from repro.data.pipeline import make_classification
 
 
 def run(scale: BenchScale, model: str = "logreg", slot_budget: int | None = None
         ) -> dict:
     n = scale.workers
     rates = np.array([0.9] * (n * 9 // 10) + [0.6] * (n - n * 9 // 10))
-    tau = 32
     slot_budget = slot_budget or scale.steps
     rng = np.random.default_rng(0)
     wps = [n // scale.subnets] * scale.subnets
+    cfg = SimConfig(eta=scale.eta, batch_size=scale.batch)
+    data = make_classification(n, scale.per_worker, dim=DIM,
+                               num_classes=CLASSES, test_size=1024, seed=0)
+    init, loss_fn, acc_fn = make_model(model)
     out = {}
 
-    # ---- MLL-SGD: per-slot execution; workers gated by p_i
-    for name, (t, q) in {"mll_tau32_q1": (32, 1), "mll_tau8_q4": (8, 4)}.items():
+    def race(name, net, sched, policy):
         t0 = time.time()
-        net, _ = baselines.mll_sgd("complete", wps, tau=t, q=q,
-                                   worker_rates=list(rates))
-        sc = BenchScale(**{**scale.__dict__, "steps": slot_budget})
-        res = run_sim(net, MLLSchedule(tau=t, q=q), sc, model=model)
-        slots_used = slot_budget
-        out[name] = (res, slots_used)
-        emit(f"timeslot/{model}/{name}/loss_at_budget",
-             float(res.train_loss[-1]), t0=t0,
-             extra=f"slots={slots_used} acc={res.test_acc[-1]:.3f}")
-
-    # ---- barrier algorithms: same simulator with p_i=1 (everyone steps every
-    # tick), but each tau-tick round costs max-NegBin slots; they only get as
-    # many ROUNDS as fit into the slot budget.
-    for name, (t, q, topo) in {"local_sgd": (32, 1, "complete"),
-                               "hl_sgd": (8, 4, "star")}.items():
-        t0 = time.time()
-        rounds_possible = 0
-        used = 0
-        while True:
-            cost = int(barrier_round_slots(rng, rates, t, 1)[0])
-            if used + cost > slot_budget:
-                break
-            used += cost
-            rounds_possible += 1
-        steps = rounds_possible * t
-        net, _ = baselines.mll_sgd(topo, wps if name == "hl_sgd" else [n],
-                                   tau=t, q=q)
-        sc = BenchScale(**{**scale.__dict__, "steps": max(steps, t)})
-        res = run_sim(net, MLLSchedule(tau=t, q=q), sc, model=model)
+        res = run_timeline(loss_fn, acc_fn, init, data.worker_data(),
+                           data.full, data.test, net, sched,
+                           slots=slot_budget, policy=policy, cfg=cfg,
+                           seed=0, policy_rng=rng)
+        used = (slot_budget if policy == "deadline"
+                else res.plan.slots_used)
         out[name] = (res, used)
         emit(f"timeslot/{model}/{name}/loss_at_budget",
              float(res.train_loss[-1]), t0=t0,
-             extra=f"slots={used} steps={steps} acc={res.test_acc[-1]:.3f}")
+             extra=f"slots={used} rounds={res.plan.rounds_completed} "
+                   f"acc={res.test_acc[-1]:.3f}")
+
+    # ---- MLL-SGD: per-slot execution; workers gated by p_i
+    for name, (t, q) in {"mll_tau32_q1": (32, 1), "mll_tau8_q4": (8, 4)}.items():
+        net, _ = baselines.mll_sgd("complete", wps, tau=t, q=q,
+                                   worker_rates=list(rates))
+        race(name, net, MLLSchedule(tau=t, q=q), "deadline")
+
+    # ---- barrier algorithms: every worker must take tau steps per round, so
+    # each round costs max-NegBin slots; fewer rounds fit the slot budget.
+    for name, (t, q, topo) in {"local_sgd": (32, 1, "complete"),
+                               "hl_sgd": (8, 4, "star")}.items():
+        net, _ = baselines.mll_sgd(topo, wps if name == "hl_sgd" else [n],
+                                   tau=t, q=q, worker_rates=list(rates))
+        race(name, net, MLLSchedule(tau=t, q=q), "barrier")
 
     fl = {k: v[0].train_loss[-1] for k, v in out.items()}
     emit("timeslot/claim/mll_q1_beats_local",

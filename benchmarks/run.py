@@ -23,8 +23,8 @@ def main(argv=None):
 
     t0 = time.time()
     from benchmarks import (bench_kernels, bench_outer, bench_protocol,
-                            bench_rates, bench_tau_q, bench_timeslot,
-                            bench_topology, roofline)
+                            bench_rates, bench_tau_q, bench_timeline,
+                            bench_timeslot, bench_topology, roofline)
 
     print("# kernels")
     bench_kernels.main(full=args.full)
@@ -37,6 +37,8 @@ def main(argv=None):
         bench_rates.main(full=args.full)
         print("# fig6/10: time-slot race")
         bench_timeslot.main(full=args.full)
+        print("# fig6/10: event-driven timeline (overlapping subnet rounds)")
+        bench_timeline.main(full=args.full)
         print("# beyond-paper: hub outer optimizer")
         bench_outer.main(full=args.full)
         print("# protocol engine: mixing x inner-optimizer sweep")

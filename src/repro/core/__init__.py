@@ -9,6 +9,11 @@ from repro.core.protocol import (MixingStrategy, MIXING_REGISTRY, register,
 from repro.core.simulator import (SimConfig, SimResult, simulate, replicate,
                                   weighted_average, apply_operator,
                                   barrier_round_slots, mll_round_slots)
+from repro.core.timeline import (ReadinessPolicy, POLICY_REGISTRY,
+                                 register_policy, get_policy,
+                                 available_policies, TimelineEvent,
+                                 TimelinePlan, TimelineResult, run_timeline,
+                                 make_timeline_step_fn)
 from repro.core.mllsgd import (MLLConfig, MLLState, build_network, build_state,
                                mll_train_step, apply_schedule,
                                apply_schedule_with_state, phase_of,
@@ -28,6 +33,9 @@ __all__ = [
     "state_from_network",
     "SimConfig", "SimResult", "simulate", "replicate", "weighted_average",
     "apply_operator", "barrier_round_slots", "mll_round_slots",
+    "ReadinessPolicy", "POLICY_REGISTRY", "register_policy", "get_policy",
+    "available_policies", "TimelineEvent", "TimelinePlan", "TimelineResult",
+    "run_timeline", "make_timeline_step_fn",
     "MLLConfig", "MLLState", "build_network", "build_state", "mll_train_step",
     "apply_schedule", "apply_schedule_with_state", "phase_of", "gate_sample",
     "gated_sgd_update", "hub_average_ppermute", "hub_average_int8",

@@ -14,6 +14,11 @@ benchmarks and tests cannot drift from the paper's definitions.
 `protocol_config` expresses the same four baselines as `MLLConfig` points of
 the protocol engine (mixing-strategy registry + gated inner optimizers), so
 the production mesh path and the simulator dispatch them identically.
+
+The wall-clock baselines (`async_local_sgd`, `gossip_sgd`) additionally name
+a timeline readiness policy (`repro.core.timeline`): they only differ from
+the barrier algorithms in WHEN rounds fire on the slot clock, so they return
+(network, schedule, policy) triples for `run_timeline`.
 """
 from __future__ import annotations
 
@@ -46,6 +51,31 @@ def mll_sgd(topology: str, workers_per_subnet: list[int], tau: int, q: int,
                                   worker_rates=worker_rates,
                                   worker_weights=worker_weights, seed=seed)
     return net, MLLSchedule(tau=tau, q=q)
+
+
+def async_local_sgd(num_workers: int, tau: int = 32, worker_rates=None,
+                    ) -> tuple[MultiLevelNetwork, MLLSchedule, str]:
+    """Local SGD without the barrier: one fully-connected sub-network whose
+    averaging fires at fixed wall-clock deadlines (every tau slots) — slow
+    workers contribute whatever steps their rate allowed instead of stalling
+    the round.  Run via ``run_timeline(..., policy="deadline")``; this is the
+    single-level degenerate case of MLL-SGD's timing model."""
+    net = MultiLevelNetwork.build("complete", [num_workers],
+                                  worker_rates=worker_rates)
+    return net, MLLSchedule(tau=tau, q=1), "deadline"
+
+
+def gossip_sgd(num_workers: int, tau: int = 32, topology: str = "ring",
+               worker_rates=None,
+               ) -> tuple[MultiLevelNetwork, MLLSchedule, str]:
+    """Asynchronous gossip SGD: every worker is its own single-worker
+    sub-network on a hub graph; after tau local steps a worker is
+    gossip-ready and averages with whichever graph neighbors are also ready
+    (neighbor-ready partial gossip) — no global rounds exist at all.  Run
+    via ``run_timeline(..., policy="gossip")``."""
+    net = MultiLevelNetwork.build(topology, [1] * num_workers,
+                                  worker_rates=worker_rates)
+    return net, MLLSchedule(tau=tau, q=1), "gossip"
 
 
 def protocol_config(name: str, *, tau: int = 8, q: int = 4,

@@ -76,7 +76,7 @@ class SimResult:
     final_avg_params: PyTree
 
 
-def _phase_ids(network: MultiLevelNetwork, schedule: MLLSchedule, k0: int, num: int) -> np.ndarray:
+def _phase_ids(schedule: MLLSchedule, k0: int, num: int) -> np.ndarray:
     """Operator index (0=I, 1=V, 2=Z) for steps k0+1 .. k0+num (paper 1-based)."""
     ids = np.zeros(num, dtype=np.int32)
     for i in range(num):
@@ -119,52 +119,20 @@ def make_step_fn(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
 
     where ``carry = (stacked, opt_state, mix_state, key)`` (see
     `init_sim_carry`).
+
+    The scan body is the timeline engine's (`core.timeline`) with an
+    all-ones active mask: the lock-step simulator IS the slot clock where
+    every slot is a tick for every worker, so the two stay equivalent by
+    construction (property-tested bit for bit in tests/test_timeline.py).
     """
-    _check_kernel(cfg)
+    from repro.core.timeline import make_timeline_step_fn
     n = network.num_workers
-    p_rates = jnp.asarray(network.worker_rates, dtype=jnp.float32)
-    st = protocol.state_from_network(network)
-    optimizer = _sim_optimizer(cfg)
-    strategy = _sim_strategy(cfg)
-    if cfg.kernel == "pallas":
-        # the fused kernel consumes the dense operator directly
-        operators = jnp.stack([jnp.eye(n, dtype=jnp.float32),
-                               st.v_op, st.z_op])
-    grad_fn = jax.grad(loss_fn)
+    scan_slots = make_timeline_step_fn(loss_fn, network, cfg,
+                                       gate_mode="bernoulli", dense_ops=False)
 
-    @jax.jit
     def scan_steps(carry, data, op_ids):
-        def body(carry, op_id):
-            stacked, opt_state, mix_state, key = carry
-            key, kb, kg = jax.random.split(key, 3)
-            wkeys = jax.random.split(kb, n)
-
-            def worker_grad(wparams, wdata, wkey):
-                nsamp = jax.tree.leaves(wdata)[0].shape[0]
-                idx = jax.random.randint(wkey, (cfg.batch_size,), 0, nsamp)
-                batch = jax.tree.map(lambda x: x[idx], wdata)
-                return grad_fn(wparams, batch)
-
-            grads = jax.vmap(worker_grad)(stacked, data, wkeys)
-            theta = (jax.random.uniform(kg, (n,)) < p_rates).astype(jnp.float32)
-
-            if cfg.kernel == "pallas":
-                from repro.kernels import ops as kops
-                t = operators[op_id]
-                stacked = kops.hier_mix_pytree(stacked, grads, t, theta,
-                                               cfg.eta)
-            else:
-                stacked, opt_state = protocol.gated_inner_update(
-                    optimizer, stacked, opt_state, grads, theta)
-                stacked, mix_state = jax.lax.switch(op_id, [
-                    lambda p, s: (p, s),
-                    lambda p, s: strategy.subnet_with_state(p, st, s),
-                    lambda p, s: strategy.hub_with_state(p, st, s),
-                ], stacked, mix_state)
-            return (stacked, opt_state, mix_state, key), None
-
-        carry, _ = jax.lax.scan(body, carry, op_ids)
-        return carry
+        ones = jnp.ones((op_ids.shape[0], n), jnp.float32)
+        return scan_slots(carry, data, op_ids, ones)
 
     return scan_steps
 
@@ -203,7 +171,7 @@ def simulate(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
     done = 0
     while done < steps:
         chunk = min(cfg.eval_every, steps - done)
-        op_ids = jnp.asarray(_phase_ids(network, schedule, done, chunk))
+        op_ids = jnp.asarray(_phase_ids(schedule, done, chunk))
         carry = scan_steps(carry, worker_data, op_ids)
         done += chunk
         u = weighted_average(carry[0], a)
@@ -218,18 +186,15 @@ def simulate(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
 # ------------------------------------------------- time-slot race (Fig. 6/10)
 def barrier_round_slots(rng: np.random.Generator, rates: np.ndarray, tau: int,
                         rounds: int) -> np.ndarray:
-    """Slots consumed per synchronous round when every worker must take tau
-    gradient steps (Local SGD / HL-SGD semantics): per worker the slot count is
-    a negative-binomial(tau, p_i) sample; the round costs the max over workers.
-    """
-    out = np.empty(rounds, dtype=np.int64)
-    for r in range(rounds):
-        # number of Bernoulli(p) trials until tau successes
-        trials = rng.negative_binomial(tau, rates) + tau
-        out[r] = trials.max()
-    return out
+    """Deprecated alias — the canonical implementation (and the event-driven
+    wall-clock engine it feeds) lives in `repro.core.timeline`; the
+    `"barrier"` readiness policy draws these exact values."""
+    from repro.core.timeline import barrier_round_slots as impl
+    return impl(rng, rates, tau, rounds)
 
 
 def mll_round_slots(tau: int, rounds: int) -> np.ndarray:
-    """MLL-SGD rounds always cost exactly tau slots (no stragglers)."""
-    return np.full(rounds, tau, dtype=np.int64)
+    """Deprecated alias — see `repro.core.timeline.mll_round_slots` (the
+    `"deadline"` readiness policy's accounting)."""
+    from repro.core.timeline import mll_round_slots as impl
+    return impl(tau, rounds)

@@ -1,0 +1,574 @@
+"""Event-driven wall-clock timeline engine: overlapping subnet rounds.
+
+The lock-step simulator (`simulator.simulate`) advances every worker on a
+shared tick; the paper's headline result (Fig. 6/10) is about WALL-CLOCK
+time slots, where sub-networks advance at their own rates and barrier
+algorithms pay the straggler tail.  This module simulates the multi-level
+network against a slot clock:
+
+  * each worker makes progress per slot under a **rate model** — Bernoulli
+    (p_i) trials (Eq. 2/3's theta gate read as "one gradient step per
+    successful slot") or a deterministic rate map (one step every ~1/p_i
+    slots),
+  * subnet V-rounds (Eq. 4, the V operator of Eq. 6) fire when the subnet's
+    local step count reaches tau,
+  * hub Z/gossip rounds (Eq. 5/6's Z operator) fire under a pluggable
+    **readiness policy**,
+
+and records per-worker/per-hub slot accounting plus an event trace.
+
+Readiness policies (registry below; `@register_policy`):
+
+  * ``"barrier"``   — global barrier: a round completes only when EVERY
+    worker has taken tau gradient steps, so each round costs the max over
+    workers of a NegBin(tau, p_i) draw.  This is Local SGD / HL-SGD
+    wall-clock semantics and reproduces the legacy `barrier_round_slots`
+    accounting draw-for-draw (shared numpy Generator).
+  * ``"deadline"``  — fixed wall-clock deadlines: V fires every tau slots
+    and Z every q*tau slots no matter what, workers contribute whatever
+    steps their rate allowed.  This is the paper's MLL-SGD timing (rounds
+    always cost exactly tau slots, `mll_round_slots`) and is tick-for-tick
+    the lock-step simulator.
+  * ``"gossip"``    — neighbor-ready partial gossip: each sub-network runs
+    its own tau-step barrier (rounds OVERLAP across subnets — no global
+    wait), and a hub that completes q V-rounds gossips with whichever
+    neighbor hubs are also ready, over the ready-restricted,
+    column-renormalized H.  Beyond-paper: the asynchronous-gossip regime of
+    Fig. 6 at production scale.
+
+Execution reuses the protocol engine end to end: `protocol.MixingStrategy`
+(every registered strategy), `protocol.gated_inner_update` (every inner
+optimizer, per-worker state frozen on idle slots), and the simulator's
+carry layout (`init_sim_carry`), so with p_i = 1 the barrier policy
+reproduces the lock-step trajectory bit for bit.  Policies that mix a
+strict subset of workers (``"gossip"``) build masked dense operators and
+therefore require ``mixing="dense"`` — the same restriction unequal-size
+sub-networks already carry.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import protocol
+from repro.core.hierarchy import MLLSchedule, MultiLevelNetwork
+from repro.core.simulator import SimConfig, _check_kernel, init_sim_carry, \
+    replicate, weighted_average
+
+PyTree = Any
+
+RATE_MODELS = ("bernoulli", "deterministic")
+
+
+# ------------------------------------------------------------ slot accounting
+def barrier_round_slots(rng: np.random.Generator, rates: np.ndarray, tau: int,
+                        rounds: int) -> np.ndarray:
+    """Slots consumed per synchronous round when every worker must take tau
+    gradient steps (Local SGD / HL-SGD semantics): per worker the slot count
+    is a negative-binomial(tau, p_i) sample; the round costs the max over
+    workers.  Canonical implementation (the `"barrier"` policy draws these
+    exact values; `simulator.barrier_round_slots` is a deprecated alias)."""
+    out = np.empty(rounds, dtype=np.int64)
+    for r in range(rounds):
+        # number of Bernoulli(p) trials until tau successes
+        trials = rng.negative_binomial(tau, rates) + tau
+        out[r] = trials.max()
+    return out
+
+
+def mll_round_slots(tau: int, rounds: int) -> np.ndarray:
+    """MLL-SGD / `"deadline"` rounds always cost exactly tau slots."""
+    return np.full(rounds, tau, dtype=np.int64)
+
+
+def _round_trials(rng: np.random.Generator | None, rates: np.ndarray,
+                  tau: int, rate_model: str) -> np.ndarray:
+    """Per-worker slots needed for tau gradient steps under the rate model."""
+    if rate_model == "deterministic":
+        return np.ceil(tau / np.asarray(rates)).astype(np.int64)
+    return rng.negative_binomial(tau, rates) + tau
+
+
+# ------------------------------------------------------------- plan structures
+@dataclasses.dataclass(frozen=True)
+class TimelineEvent:
+    """One averaging round firing on the slot clock (slot is 1-based: the
+    round fires at the END of that slot, after its gradient step)."""
+    slot: int
+    kind: str                       # "subnet" | "hub"
+    participants: tuple[int, ...]   # subnet ids taking part
+    round_index: int                # per-policy round counter
+
+
+@dataclasses.dataclass
+class TimelinePlan:
+    """Host-side bookkeeping a ReadinessPolicy emits; the executor replays it.
+
+    ``active[s, i]`` = 1 when worker i applies a gradient step during slot s;
+    under ``gate_mode="bernoulli"`` it is additionally multiplied by the
+    in-scan Bernoulli(p_i) draw (the lock-step simulator's gate), under
+    ``"forced"`` it is the gate (progress was already drawn host-side).
+    ``op_ids[s]`` selects the strategy operator at slot s (0 = I, 1 = V,
+    2 = Z); policies mixing a strict subset instead put a composed dense
+    (W, W) operator in ``op_mats[s]`` and leave ``op_ids`` zero.
+
+    ``busy_slots``/``idle_slots`` are realized per-worker counts for
+    ``"forced"`` plans; under ``gate_mode="bernoulli"`` the progress draws
+    happen inside the scan, so ``busy_slots`` is the EXPECTED count (the
+    realized one rides the carry as ``opt_state["counts"]``).
+    """
+    slots: int
+    active: np.ndarray                       # (L, W) float32
+    op_ids: np.ndarray                       # (L,) int32
+    gate_mode: str                           # "bernoulli" | "forced"
+    events: list[TimelineEvent]
+    busy_slots: np.ndarray                   # (W,) slots spent making progress
+    idle_slots: np.ndarray                   # (W,) slots blocked at a barrier
+    round_costs: np.ndarray                  # slots per completed global round
+    rounds_completed: int
+    op_mats: dict[int, np.ndarray] | None = None   # slot -> (W, W) operator
+    subnet_round_costs: list[list[int]] | None = None
+
+    @property
+    def slots_used(self) -> int:
+        """Wall-clock slots consumed by completed rounds.  Rounds are
+        sequential per sub-network, so overlapping-round policies report the
+        busiest sub-network's clock; for global-round policies this is the
+        legacy budget-loop's `used` (sum of round costs)."""
+        if self.subnet_round_costs is not None:
+            return max((sum(c) for c in self.subnet_round_costs), default=0)
+        return int(self.round_costs.sum())
+
+
+# ----------------------------------------------------------- policy registry
+class ReadinessPolicy:
+    """When do V and Z rounds fire on the slot clock?
+
+    Subclasses implement ``plan`` producing a `TimelinePlan` for a network +
+    (tau, q) schedule + slot budget.  ``needs_dense`` marks policies whose
+    events mix a strict subset of workers and therefore execute through
+    per-slot dense operators (``mixing="dense"`` only).
+    """
+    name: str = "?"
+    needs_dense: bool = False
+
+    def plan(self, network: MultiLevelNetwork, schedule: MLLSchedule,
+             slots: int, rng: np.random.Generator, *,
+             rate_model: str = "bernoulli") -> TimelinePlan:
+        raise NotImplementedError
+
+
+POLICY_REGISTRY: dict[str, type[ReadinessPolicy]] = {}
+
+
+def register_policy(name: str) -> Callable[[type[ReadinessPolicy]],
+                                           type[ReadinessPolicy]]:
+    def deco(cls: type[ReadinessPolicy]) -> type[ReadinessPolicy]:
+        cls.name = name
+        POLICY_REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def get_policy(name: str) -> ReadinessPolicy:
+    try:
+        cls = POLICY_REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown readiness policy {name!r}; registered: "
+                         f"{available_policies()}") from None
+    return cls()
+
+
+def available_policies() -> tuple[str, ...]:
+    return tuple(sorted(POLICY_REGISTRY))
+
+
+def _check_rate_model(rate_model: str) -> None:
+    if rate_model not in RATE_MODELS:
+        raise ValueError(f"unknown rate model {rate_model!r}; "
+                         f"expected one of {RATE_MODELS}")
+
+
+# ------------------------------------------------------------------- policies
+@register_policy("barrier")
+class GlobalBarrierPolicy(ReadinessPolicy):
+    """Local SGD / HL-SGD wall-clock semantics: one global round at a time.
+
+    Every worker must take tau gradient steps before the round's averaging
+    (V, or Z on each q-th round) fires; the round costs the max over workers
+    of their NegBin(tau, p_i) slot count, drawn with the exact calls of the
+    legacy `barrier_round_slots` so accounting matches draw-for-draw on a
+    shared Generator.  Workers place their tau steps in the round's first
+    tau slots (the trajectory only depends on the steps happening before
+    the barrier) and idle for the rest.
+    """
+
+    def plan(self, network, schedule, slots, rng, *, rate_model="bernoulli"):
+        _check_rate_model(rate_model)
+        n = network.num_workers
+        tau, q = schedule.tau, schedule.q
+        rates = np.asarray(network.worker_rates)
+        all_subnets = tuple(range(network.num_subnets))
+        active = np.zeros((slots, n), np.float32)
+        op_ids = np.zeros(slots, np.int32)
+        busy = np.zeros(n, np.int64)
+        idle = np.zeros(n, np.int64)
+        events: list[TimelineEvent] = []
+        costs: list[int] = []
+        used = 0
+        r = 0
+        while True:
+            trials = _round_trials(rng, rates, tau, rate_model)
+            cost = int(trials.max())
+            if used + cost > slots:
+                break
+            active[used:used + tau, :] = 1.0
+            r += 1
+            kind = "hub" if r % q == 0 else "subnet"
+            op_ids[used + cost - 1] = (protocol.PHASE_HUB if kind == "hub"
+                                       else protocol.PHASE_SUBNET)
+            events.append(TimelineEvent(used + cost, kind, all_subnets, r))
+            busy += trials
+            idle += cost - trials
+            costs.append(cost)
+            used += cost
+        return TimelinePlan(slots=slots, active=active, op_ids=op_ids,
+                            gate_mode="forced", events=events,
+                            busy_slots=busy, idle_slots=idle,
+                            round_costs=np.asarray(costs, np.int64),
+                            rounds_completed=r)
+
+
+@register_policy("deadline")
+class FixedDeadlinePolicy(ReadinessPolicy):
+    """The paper's MLL-SGD timing: averaging at fixed wall-clock deadlines.
+
+    V fires every tau slots and Z every q*tau slots (Eq. 6 with k = the slot
+    index); workers contribute whatever gradient steps their rate allowed —
+    nobody waits, every round costs exactly tau slots (`mll_round_slots`).
+    Under the Bernoulli rate model this is tick-for-tick the lock-step
+    simulator (`simulator.simulate`), whose in-scan gate does the progress
+    draws; the deterministic rate model forces a 1/p_i staircase instead.
+    """
+
+    def plan(self, network, schedule, slots, rng, *, rate_model="bernoulli"):
+        _check_rate_model(rate_model)
+        n = network.num_workers
+        tau, q = schedule.tau, schedule.q
+        all_subnets = tuple(range(network.num_subnets))
+        if rate_model == "deterministic":
+            # worker i steps on slots where floor((s+1) p) > floor(s p)
+            s = np.arange(slots + 1)[:, None]
+            p = np.asarray(network.worker_rates)[None, :]
+            stair = np.floor(s * p)
+            active = (stair[1:] > stair[:-1]).astype(np.float32)
+            gate_mode = "forced"
+        else:
+            active = np.ones((slots, n), np.float32)
+            gate_mode = "bernoulli"
+        op_ids = np.zeros(slots, np.int32)
+        events: list[TimelineEvent] = []
+        r = 0
+        for s in range(tau, slots + 1, tau):
+            r += 1
+            kind = "hub" if s % (q * tau) == 0 else "subnet"
+            op_ids[s - 1] = (protocol.PHASE_HUB if kind == "hub"
+                             else protocol.PHASE_SUBNET)
+            events.append(TimelineEvent(s, kind, all_subnets, r))
+        busy = active.sum(axis=0).astype(np.int64) if gate_mode == "forced" \
+            else np.round(slots * np.asarray(network.worker_rates)
+                          ).astype(np.int64)   # expected under Bernoulli
+        return TimelinePlan(slots=slots, active=active, op_ids=op_ids,
+                            gate_mode=gate_mode, events=events,
+                            busy_slots=busy,
+                            idle_slots=np.zeros(n, np.int64),
+                            round_costs=mll_round_slots(tau, r),
+                            rounds_completed=r)
+
+
+def _subnet_v_matrix(network: MultiLevelNetwork, d: int) -> np.ndarray:
+    """V restricted to sub-network d: its block from the full V, identity
+    elsewhere (other subnets keep running — rounds overlap)."""
+    n = network.num_workers
+    idx = np.nonzero(network.subnet_of == d)[0]
+    t = np.eye(n)
+    t[np.ix_(idx, idx)] = network.v[idx][:, None]
+    return t
+
+
+def _partial_z_matrix(network: MultiLevelNetwork,
+                      ready: tuple[int, ...]) -> np.ndarray:
+    """Z restricted to the ready hubs: H's columns renormalized over the
+    ready set (H[:, e] has positive diagonal, so the renormalization is
+    well-defined), composed with each ready subnet's internal averaging —
+    the partial-gossip analogue of Z_ij = H_{d(i),d(j)} v_i.  Workers of
+    non-ready hubs are untouched (identity)."""
+    n = network.num_workers
+    h = network.hub_net.h
+    v = network.v
+    sub = network.subnet_of
+    ready_set = set(int(e) for e in ready)
+    hn = np.zeros_like(h)
+    idx = sorted(ready_set)
+    for e in idx:
+        denom = sum(h[f, e] for f in idx)
+        for f in idx:
+            hn[f, e] = h[f, e] / denom
+    t = np.eye(n)
+    in_ready = np.isin(sub, idx)
+    for j in np.nonzero(in_ready)[0]:
+        col = hn[sub, sub[j]] * v * in_ready
+        t[:, j] = col
+    return t
+
+
+@register_policy("gossip")
+class NeighborReadyGossipPolicy(ReadinessPolicy):
+    """Neighbor-ready partial gossip: fully overlapping subnet rounds.
+
+    Each sub-network d runs its OWN tau-step barrier: its round completes
+    when all of d's workers took tau steps (max NegBin over d's workers
+    only) and fires a V round restricted to d — other subnets never wait.
+    After q V-rounds hub d becomes gossip-ready; at the end of any slot
+    where a ready hub has at least one ready neighbor, the ready
+    neighborhood gossips over the ready-restricted, column-renormalized H
+    and their readiness resets.  A ready hub with no ready neighbor keeps
+    training (readiness is sticky, never blocking).
+
+    All events mix strict subsets of workers, so execution goes through
+    per-slot dense operators (``mixing="dense"``).
+    """
+    needs_dense = True
+
+    def plan(self, network, schedule, slots, rng, *, rate_model="bernoulli"):
+        _check_rate_model(rate_model)
+        n = network.num_workers
+        tau, q = schedule.tau, schedule.q
+        nd = network.num_subnets
+        rates = np.asarray(network.worker_rates)
+        subnet_workers = [np.nonzero(network.subnet_of == d)[0]
+                          for d in range(nd)]
+        v_mats = [_subnet_v_matrix(network, d) for d in range(nd)]
+
+        active = np.zeros((slots, n), np.float32)
+        op_mats: dict[int, np.ndarray] = {}
+        events: list[TimelineEvent] = []
+        busy = np.zeros(n, np.int64)
+        idle = np.zeros(n, np.int64)
+        subnet_costs: list[list[int]] = [[] for _ in range(nd)]
+        v_done = np.zeros(nd, np.int64)
+        pending = np.zeros(nd, bool)
+        hub_rounds = 0
+        start = np.zeros(nd, np.int64)
+        end = np.zeros(nd, np.int64)
+
+        def begin_round(d: int, s: int) -> None:
+            w = subnet_workers[d]
+            trials = _round_trials(rng, rates[w], tau, rate_model)
+            cost = int(trials.max())
+            start[d], end[d] = s, s + cost
+            hi = min(s + tau, slots)
+            active[s:hi, w] = 1.0
+            span = min(cost, slots - s)      # accounting clipped to budget
+            busy[w] += np.minimum(trials, span)
+            idle[w] += np.maximum(span - trials, 0)
+
+        for d in range(nd):
+            begin_round(d, 0)
+        for s in range(slots):
+            fired: list[np.ndarray] = []
+            completed = [d for d in range(nd) if end[d] == s + 1]
+            for d in completed:
+                subnet_costs[d].append(int(end[d] - start[d]))
+                v_done[d] += 1
+                fired.append(v_mats[d])
+                events.append(TimelineEvent(s + 1, "subnet", (d,),
+                                            int(v_done[d])))
+                if v_done[d] % q == 0:
+                    pending[d] = True
+            for d in range(nd):
+                if pending[d]:
+                    ready_nbrs = [int(e) for e in network.hub_net.neighbors(d)
+                                  if pending[e]]
+                    if ready_nbrs:
+                        group = tuple(sorted({d, *ready_nbrs}))
+                        hub_rounds += 1
+                        fired.append(_partial_z_matrix(network, group))
+                        events.append(TimelineEvent(s + 1, "hub", group,
+                                                    hub_rounds))
+                        for e in group:
+                            pending[e] = False
+            for d in completed:
+                if s + 1 < slots:
+                    begin_round(d, s + 1)
+            if fired:
+                mat = fired[0]
+                for f in fired[1:]:
+                    mat = mat @ f       # X (T1 T2) = (X T1) T2
+                op_mats[s] = mat.astype(np.float32)
+
+        flat_costs = [c for per in subnet_costs for c in per]
+        return TimelinePlan(slots=slots, active=active,
+                            op_ids=np.zeros(slots, np.int32),
+                            gate_mode="forced", events=events,
+                            busy_slots=busy, idle_slots=idle,
+                            round_costs=np.asarray(flat_costs, np.int64),
+                            rounds_completed=int(v_done.sum()),
+                            op_mats=op_mats, subnet_round_costs=subnet_costs)
+
+
+# ---------------------------------------------------------------- execution
+def make_timeline_step_fn(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
+                          network: MultiLevelNetwork, cfg: SimConfig, *,
+                          gate_mode: str, dense_ops: bool):
+    """Jitted scan over slots; mirrors `simulator.make_step_fn` (identical
+    PRNG consumption per slot, so trajectories are bit-for-bit comparable)
+    with two extensions: a per-slot ``active`` mask multiplying (bernoulli)
+    or replacing (forced) the gate draw, and — for ``dense_ops`` — a per-slot
+    dense (W, W) operator instead of the strategy's lax.switch.
+
+    Signature: ``scan_slots(carry, data, ops, active) -> carry`` where
+    ``ops`` is (L,) int32 op ids or (L, W, W) float32 operators and
+    ``carry`` is the simulator's (`init_sim_carry`) layout.
+    """
+    if gate_mode not in ("bernoulli", "forced"):
+        raise ValueError(f"unknown gate_mode {gate_mode!r}")
+    _check_kernel(cfg)
+    if dense_ops and cfg.mixing != "dense":
+        raise ValueError(
+            "policies with partial-participation events (needs_dense) build "
+            "masked dense operators; they require mixing='dense' — like "
+            "unequal-size sub-networks")
+    n = network.num_workers
+    p_rates = jnp.asarray(network.worker_rates, dtype=jnp.float32)
+    st = protocol.state_from_network(network)
+    optimizer = protocol.resolve_inner_optimizer(cfg)
+    strategy = protocol.resolve_mixing(cfg)
+    if cfg.kernel == "pallas" and not dense_ops:
+        operators = jnp.stack([jnp.eye(n, dtype=jnp.float32),
+                               st.v_op, st.z_op])
+    grad_fn = jax.grad(loss_fn)
+
+    @jax.jit
+    def scan_slots(carry, data, ops, active):
+        def body(carry, xs):
+            op, act = xs
+            stacked, opt_state, mix_state, key = carry
+            key, kb, kg = jax.random.split(key, 3)
+            wkeys = jax.random.split(kb, n)
+
+            def worker_grad(wparams, wdata, wkey):
+                nsamp = jax.tree.leaves(wdata)[0].shape[0]
+                idx = jax.random.randint(wkey, (cfg.batch_size,), 0, nsamp)
+                batch = jax.tree.map(lambda x: x[idx], wdata)
+                return grad_fn(wparams, batch)
+
+            grads = jax.vmap(worker_grad)(stacked, data, wkeys)
+            draw = (jax.random.uniform(kg, (n,)) < p_rates).astype(jnp.float32)
+            theta = draw * act if gate_mode == "bernoulli" else act
+
+            if cfg.kernel == "pallas":
+                from repro.kernels import ops as kops
+                t = op if dense_ops else operators[op]
+                stacked = kops.hier_mix_pytree(stacked, grads, t, theta,
+                                               cfg.eta)
+                opt_state = {"inner": opt_state["inner"],
+                             "counts": opt_state["counts"]
+                             + (theta != 0).astype(jnp.int32)}
+            else:
+                stacked, opt_state = protocol.gated_inner_update(
+                    optimizer, stacked, opt_state, grads, theta)
+                if dense_ops:
+                    stacked = jax.tree.map(
+                        lambda x: jnp.einsum("ij,i...->j...",
+                                             op.astype(x.dtype), x), stacked)
+                else:
+                    stacked, mix_state = jax.lax.switch(op, [
+                        lambda p, s: (p, s),
+                        lambda p, s: strategy.subnet_with_state(p, st, s),
+                        lambda p, s: strategy.hub_with_state(p, st, s),
+                    ], stacked, mix_state)
+            return (stacked, opt_state, mix_state, key), None
+
+        carry, _ = jax.lax.scan(body, carry, (ops, active))
+        return carry
+
+    return scan_slots
+
+
+def _chunk_ops(plan: TimelinePlan, lo: int, hi: int, num_workers: int, *,
+               dense: bool) -> jnp.ndarray:
+    """Per-slot operators for slots [lo, hi): ids (strategy path) or stacked
+    dense matrices (identity on event-free slots)."""
+    if not dense:
+        return jnp.asarray(plan.op_ids[lo:hi])
+    eye = np.eye(num_workers, dtype=np.float32)
+    mats = np.stack([(plan.op_mats or {}).get(s, eye) for s in range(lo, hi)])
+    return jnp.asarray(mats)
+
+
+@dataclasses.dataclass
+class TimelineResult:
+    slots: np.ndarray             # eval slot indices (1-based, inclusive)
+    train_loss: np.ndarray        # F(u) on the full training set
+    test_acc: np.ndarray
+    final_avg_params: PyTree
+    plan: TimelinePlan
+
+
+def run_timeline(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
+                 accuracy_fn: Callable[[PyTree, PyTree], jnp.ndarray],
+                 init_params: PyTree,
+                 worker_data: PyTree,
+                 eval_data: PyTree,
+                 test_data: PyTree,
+                 network: MultiLevelNetwork,
+                 schedule: MLLSchedule,
+                 *,
+                 slots: int,
+                 policy: str | ReadinessPolicy = "barrier",
+                 cfg: SimConfig = SimConfig(),
+                 seed: int = 0,
+                 policy_rng: np.random.Generator | None = None,
+                 rate_model: str = "bernoulli") -> TimelineResult:
+    """Run the network against the slot clock for `slots` slots.
+
+    ``policy_rng`` drives the policy's host-side progress draws (defaults to
+    ``np.random.default_rng(seed)``); pass the legacy Generator to reproduce
+    `barrier_round_slots` accounting draw-for-draw.  ``seed`` also seeds the
+    in-scan PRNG (minibatch sampling + Bernoulli gate), matching
+    `simulator.simulate`'s stream.  Evaluates u every `cfg.eval_every` slots.
+    """
+    pol = get_policy(policy) if isinstance(policy, str) else policy
+    rng = policy_rng if policy_rng is not None else np.random.default_rng(seed)
+    plan = pol.plan(network, schedule, slots, rng, rate_model=rate_model)
+    n = network.num_workers
+    a = jnp.asarray(network.a, dtype=jnp.float32)
+    stacked = replicate(init_params, n)
+    carry = init_sim_carry(stacked, cfg, seed)
+    dense = pol.needs_dense or plan.op_mats is not None
+    scan_slots = make_timeline_step_fn(loss_fn, network, cfg,
+                                       gate_mode=plan.gate_mode,
+                                       dense_ops=dense)
+    eval_loss = jax.jit(loss_fn)
+    eval_acc = jax.jit(accuracy_fn)
+
+    rec_slots, rec_loss, rec_acc = [], [], []
+    done = 0
+    while done < slots:
+        chunk = min(cfg.eval_every, slots - done)
+        ops = _chunk_ops(plan, done, done + chunk, n, dense=dense)
+        active = jnp.asarray(plan.active[done:done + chunk])
+        carry = scan_slots(carry, worker_data, ops, active)
+        done += chunk
+        u = weighted_average(carry[0], a)
+        rec_slots.append(done)
+        rec_loss.append(float(eval_loss(u, eval_data)))
+        rec_acc.append(float(eval_acc(u, test_data)))
+    u = weighted_average(carry[0], a)
+    return TimelineResult(np.asarray(rec_slots), np.asarray(rec_loss),
+                          np.asarray(rec_acc), u, plan)

@@ -46,34 +46,51 @@ def _kernel(x_ref, g_ref, t_ref, theta_ref, o_ref, *, eta: float):
         t_op, u, (((0,), (0,)), ((), ()))).astype(o_ref.dtype)   # T^T @ u
 
 
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
 def hier_mix_chunks(x: jnp.ndarray, g: jnp.ndarray, t_op: jnp.ndarray,
                     theta: jnp.ndarray, eta: float, *, block_c: int = 512,
                     interpret: bool = False) -> jnp.ndarray:
-    """x, g: (W, C); t_op: (W, W); theta: (W,) -> (W, C)."""
+    """x, g: (W, C); t_op: (W, W); theta: (W,) -> (W, C).
+
+    Blocks are padded to the TPU tile grid — lane dim (C chunks) to a
+    multiple of 128, sublane dim (W) to the dtype's minimum sublane count —
+    so the kernel compiles on real hardware for awkward leaf shapes, not
+    just in interpret mode.  Zero padding is exact: padded workers carry
+    x = g = theta = 0 and zero rows/columns of T, contributing nothing to
+    the contraction.
+    """
     w, c = x.shape
-    block_c = min(block_c, c)
-    pad = -c % block_c
-    if pad:
-        x = jnp.pad(x, ((0, 0), (0, pad)))
-        g = jnp.pad(g, ((0, 0), (0, pad)))
-    cp = c + pad
+    # lane alignment: the chunk dim must tile in 128-lane multiples
+    block_c = _round_up(min(block_c, _round_up(c, 128)), 128)
+    cp = _round_up(c, block_c)
+    # sublane alignment: min tile is (8, 128) for f32, (16, 128) for bf16
+    sub = 16 if x.dtype == jnp.bfloat16 else 8
+    wp = _round_up(w, sub)
+    if (wp, cp) != (w, c):
+        x = jnp.pad(x, ((0, wp - w), (0, cp - c)))
+        g = jnp.pad(g, ((0, wp - w), (0, cp - c)))
+        t_op = jnp.pad(t_op, ((0, wp - w), (0, wp - w)))
+        theta = jnp.pad(theta, ((0, wp - w),))
     grid = (cp // block_c,)
     out = pl.pallas_call(
         functools.partial(_kernel, eta=eta),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((w, block_c), lambda i: (0, i)),
-            pl.BlockSpec((w, block_c), lambda i: (0, i)),
-            pl.BlockSpec((w, w), lambda i: (0, 0)),
-            pl.BlockSpec((w, 1), lambda i: (0, 0)),
+            pl.BlockSpec((wp, block_c), lambda i: (0, i)),
+            pl.BlockSpec((wp, block_c), lambda i: (0, i)),
+            pl.BlockSpec((wp, wp), lambda i: (0, 0)),
+            pl.BlockSpec((wp, 1), lambda i: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((w, block_c), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((w, cp), x.dtype),
+        out_specs=pl.BlockSpec((wp, block_c), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((wp, cp), x.dtype),
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x, g, t_op, theta[:, None])
-    return out[:, :c]
+    return out[:w, :c]
 
 
 def hier_mix_tree(stacked_params, stacked_grads, t_op, theta, eta: float, *,

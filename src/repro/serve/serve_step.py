@@ -44,17 +44,23 @@ def generate(params: PyTree, prompt: jnp.ndarray, cfg: ArchConfig, *,
     """Greedy/sampled generation for the examples: prefill via repeated
     decode (CPU-friendly), then generate `max_new` tokens."""
     b, plen = prompt.shape
-    max_len = max_len or (plen + max_new)
+    if max_len is None:
+        max_len = plen + max_new
+    elif max_len < plen + max_new:
+        raise ValueError(
+            f"max_len={max_len} cannot hold the prompt ({plen} tokens) plus "
+            f"max_new={max_new} generated tokens; the decode cache would be "
+            f"overrun — pass max_len >= {plen + max_new}")
     state = model_mod.init_decode_state(cfg, b, max_len)
     key = jax.random.PRNGKey(seed)
 
     step_fn = jax.jit(lambda p, s, t, c, k: serve_step(
         p, s, {"tokens": t}, c, cfg, temperature=temperature, rng=k))
 
-    nxt = prompt[:, 0]
     for t in range(plen - 1):
+        key, sub = jax.random.split(key)
         _, state = step_fn(params, state, prompt[:, t:t + 1],
-                           jnp.asarray(t, jnp.int32), key)
+                           jnp.asarray(t, jnp.int32), sub)
     out = [prompt]
     cur_tok = prompt[:, -1:]
     for t in range(plen - 1, plen - 1 + max_new):

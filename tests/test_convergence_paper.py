@@ -15,8 +15,8 @@ import pytest
 
 from repro.core import baselines
 from repro.core.hierarchy import MLLSchedule, MultiLevelNetwork
-from repro.core.simulator import (SimConfig, barrier_round_slots,
-                                  mll_round_slots, simulate)
+from repro.core.simulator import SimConfig, simulate
+from repro.core.timeline import get_policy
 from repro.data.pipeline import make_classification
 
 DIM, CLASSES = 16, 4
@@ -92,18 +92,28 @@ def test_same_average_rate_same_convergence():
 
 def test_straggler_race_mll_wins_per_slot():
     """Fig 6 mechanism: synchronous Local SGD pays the negative-binomial
-    straggler tail per round; MLL-SGD rounds always cost tau slots.  With
-    10% slow workers the barrier cost must exceed tau by a clear margin."""
-    rng = np.random.default_rng(0)
-    rates = np.array([0.9] * 90 + [0.6] * 10)
-    tau, rounds = 32, 64
-    barrier = barrier_round_slots(rng, rates, tau, rounds)
-    mll = mll_round_slots(tau, rounds)
-    assert mll.sum() == tau * rounds
-    assert barrier.sum() > 1.3 * mll.sum()
-    # in the same wall-clock budget MLL-SGD completes ~barrier/tau more rounds
-    speedup = barrier.sum() / mll.sum()
+    straggler tail per round; MLL-SGD rounds always cost tau slots.  The
+    timeline engine's readiness policies produce both accountings: with 10%
+    slow workers the barrier policy's rounds must cost >1.3x the deadline
+    policy's in the same slot budget."""
+    rates = [0.9] * 90 + [0.6] * 10
+    tau, slots = 32, 3072
+    net, _ = baselines.mll_sgd("complete", [100], tau=tau, q=1,
+                               worker_rates=rates)
+    sched = MLLSchedule(tau=tau, q=1)
+    barrier = get_policy("barrier").plan(net, sched, slots,
+                                         np.random.default_rng(0))
+    mll = get_policy("deadline").plan(net, sched, slots,
+                                      np.random.default_rng(0))
+    assert (mll.round_costs == tau).all()
+    assert (barrier.round_costs > tau).all()    # every round pays the tail
+    # in the same wall-clock budget MLL-SGD completes ~1.3x more rounds
+    assert mll.rounds_completed > 1.3 * barrier.rounds_completed
+    speedup = barrier.round_costs.mean() / mll.round_costs.mean()
     assert speedup > 1.3
+    # fast workers spend the difference waiting at the barrier
+    assert barrier.idle_slots[:90].min() > 0
+    assert mll.idle_slots.sum() == 0
 
 
 def test_heterogeneous_rates_still_converge():

@@ -110,6 +110,74 @@ def test_hier_mix_sweep(data):
                                np.asarray(want, np.float32), **_tol(dtype))
 
 
+def test_hier_mix_awkward_shape_is_tile_aligned():
+    """(20, 37): neither dim matches the TPU tile grid ((8, 128) f32 /
+    (16, 128) bf16) — the kernel must pad W to a sublane multiple and C to a
+    lane multiple instead of emitting non-aligned blocks that only work in
+    interpret mode."""
+    from repro.kernels.hier_mix import _round_up
+    w, c = 20, 37
+    key = jax.random.PRNGKey(6)
+    t_op = jax.nn.softmax(jax.random.normal(key, (w, w)), axis=0)
+    theta = (jax.random.uniform(jax.random.fold_in(key, 1), (w,)) > 0.3
+             ).astype(jnp.float32)
+    for dtype, sub in ((jnp.float32, 8), (jnp.bfloat16, 16)):
+        assert _round_up(w, sub) % sub == 0 and _round_up(c, 128) % 128 == 0
+        x = jax.random.normal(jax.random.fold_in(key, 2), (w, c),
+                              jnp.float32).astype(dtype)
+        g = jax.random.normal(jax.random.fold_in(key, 3), (w, c),
+                              jnp.float32).astype(dtype)
+        out = hier_mix_chunks(x, g, t_op, theta, 0.1, interpret=True)
+        assert out.shape == (w, c) and out.dtype == dtype
+        want = ref.hier_mix_ref(x, g, t_op, theta, 0.1)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want, np.float32),
+                                   **_tol(dtype))
+
+
+def test_simulator_pallas_and_xla_carries_stay_equivalent():
+    """The simulator's two backends must advance the SAME carry: params
+    within tolerance and the engine-owned per-worker update counts exactly —
+    the Pallas branch folds the gated update into the kernel but may not
+    freeze `opt_state['counts']` at zero."""
+    from repro.core import baselines
+    from repro.core.hierarchy import MLLSchedule
+    from repro.core.simulator import (SimConfig, init_sim_carry, make_step_fn,
+                                      _phase_ids, replicate)
+    from repro.data.pipeline import make_classification
+
+    rates = [1.0, 0.8, 0.6, 0.9, 1.0, 0.7, 0.5, 1.0]
+    net, _ = baselines.mll_sgd("ring", [4, 4], tau=3, q=2,
+                               worker_rates=rates)
+    sched = MLLSchedule(tau=3, q=2)
+    data = make_classification(8, 64, dim=6, num_classes=3, test_size=16)
+
+    def loss_fn(p, batch):
+        logits = batch["x"] @ p["w"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, batch["y"][:, None], axis=1)[:, 0]
+        return (lse - gold).mean()
+
+    stacked = replicate({"w": jnp.zeros((6, 3))}, 8)
+    op_ids = jnp.asarray(_phase_ids(sched, 0, 12))
+    carries = {}
+    for kernel in ("xla", "pallas"):
+        cfg = SimConfig(eta=0.1, batch_size=8, kernel=kernel)
+        step = make_step_fn(loss_fn, net, cfg)
+        carries[kernel] = step(init_sim_carry(stacked, cfg, seed=0),
+                               data.worker_data(), op_ids)
+    px, pk = carries["xla"][0], carries["pallas"][0]
+    np.testing.assert_allclose(np.asarray(px["w"]), np.asarray(pk["w"]),
+                               atol=1e-5, rtol=1e-5)
+    cx = carries["xla"][1]["counts"]
+    ck = carries["pallas"][1]["counts"]
+    np.testing.assert_array_equal(np.asarray(cx), np.asarray(ck))
+    assert int(np.asarray(ck).sum()) > 0, "counts frozen at zero"
+    # identical PRNG stream -> identical gate draws -> identical keys
+    np.testing.assert_array_equal(np.asarray(carries["xla"][3]),
+                                  np.asarray(carries["pallas"][3]))
+
+
 def test_hier_mix_identity_operator_is_plain_sgd():
     w, c = 4, 300
     key = jax.random.PRNGKey(0)

@@ -1,0 +1,304 @@
+"""Event-driven timeline engine (`repro.core.timeline`): policy registry,
+degenerate-policy equivalence against the lock-step simulator, slot
+accounting against the legacy NegBin draws, and the overlapping-round /
+partial-gossip semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines, simulator, timeline
+from repro.core.hierarchy import MLLSchedule
+from repro.core.simulator import SimConfig, simulate
+from repro.core.timeline import (GlobalBarrierPolicy, TimelinePlan,
+                                 _partial_z_matrix, _subnet_v_matrix,
+                                 available_policies, barrier_round_slots,
+                                 get_policy, mll_round_slots, register_policy,
+                                 run_timeline)
+from repro.data.pipeline import make_classification
+
+DIM, CLASSES = 8, 3
+
+
+def _task(num_workers, per_worker=128, seed=0):
+    data = make_classification(num_workers, per_worker, dim=DIM,
+                               num_classes=CLASSES, test_size=128, seed=seed)
+
+    def loss_fn(p, batch):
+        logits = batch["x"] @ p["w"] + p["b"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, batch["y"][:, None], axis=1)[:, 0]
+        return (lse - gold).mean()
+
+    def acc_fn(p, batch):
+        logits = batch["x"] @ p["w"] + p["b"]
+        return (jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32).mean()
+
+    init = {"w": jnp.zeros((DIM, CLASSES)), "b": jnp.zeros((CLASSES,))}
+    return data, loss_fn, acc_fn, init
+
+
+def _run_both(net, sched, policy, *, slots=48, seed=0, cfg=None,
+              policy_rng=None, rate_model="bernoulli"):
+    cfg = cfg or SimConfig(eta=0.1, batch_size=8)
+    data, loss_fn, acc_fn, init = _task(net.num_workers, seed=seed)
+    sim = simulate(loss_fn, acc_fn, init, data.worker_data(), data.full,
+                   data.test, net, sched, steps=slots, cfg=cfg, seed=seed)
+    tl = run_timeline(loss_fn, acc_fn, init, data.worker_data(), data.full,
+                      data.test, net, sched, slots=slots, policy=policy,
+                      cfg=cfg, seed=seed, policy_rng=policy_rng,
+                      rate_model=rate_model)
+    return sim, tl
+
+
+def _run_tl(net, sched, policy, *, slots=48, seed=0, cfg=None,
+            policy_rng=None, rate_model="bernoulli"):
+    cfg = cfg or SimConfig(eta=0.1, batch_size=8)
+    data, loss_fn, acc_fn, init = _task(net.num_workers, seed=seed)
+    return run_timeline(loss_fn, acc_fn, init, data.worker_data(), data.full,
+                        data.test, net, sched, slots=slots, policy=policy,
+                        cfg=cfg, seed=seed, policy_rng=policy_rng,
+                        rate_model=rate_model)
+
+
+# -------------------------------------------------------------------- registry
+def test_registry_contents_and_lookup():
+    assert set(available_policies()) >= {"barrier", "deadline", "gossip"}
+    assert isinstance(get_policy("barrier"), GlobalBarrierPolicy)
+    with pytest.raises(ValueError, match="unknown readiness policy"):
+        get_policy("nope")
+
+
+def test_register_policy_decorator():
+    @register_policy("_test_eager")
+    class EagerPolicy(GlobalBarrierPolicy):
+        pass
+
+    try:
+        assert "_test_eager" in available_policies()
+        assert get_policy("_test_eager").name == "_test_eager"
+    finally:
+        del timeline.POLICY_REGISTRY["_test_eager"]
+
+
+# --------------------------------------- (a) degenerate-policy equivalence
+@pytest.mark.parametrize("tau,q,seed", [(4, 2, 0), (3, 3, 1), (8, 1, 2)])
+def test_barrier_p1_reproduces_lockstep_bit_for_bit(tau, q, seed):
+    """With p_i = 1 every NegBin draw is exactly tau, rounds run back to
+    back, and the global-barrier policy must replay the lock-step simulator
+    tick for tick — bit-for-bit identical trajectory AND eval curves."""
+    net, _ = baselines.mll_sgd("complete", [4, 4], tau=tau, q=q)
+    sim, tl = _run_both(net, MLLSchedule(tau=tau, q=q), "barrier",
+                        slots=6 * tau, seed=seed)
+    for a, b in zip(jax.tree.leaves(sim.final_avg_params),
+                    jax.tree.leaves(tl.final_avg_params)):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(sim.train_loss, tl.train_loss)
+    np.testing.assert_array_equal(sim.test_acc, tl.test_acc)
+
+
+def test_deadline_reproduces_lockstep_with_heterogeneous_rates():
+    """The fixed-deadline policy IS the lock-step simulator for any rate
+    vector: same PRNG stream, same gate, same operators — bit for bit."""
+    rates = [1.0, 0.9, 0.8, 0.5, 0.7, 1.0, 0.6, 0.9]
+    net, _ = baselines.mll_sgd("ring", [4, 4], tau=4, q=2, worker_rates=rates)
+    sim, tl = _run_both(net, MLLSchedule(tau=4, q=2), "deadline",
+                        slots=48, seed=3)
+    for a, b in zip(jax.tree.leaves(sim.final_avg_params),
+                    jax.tree.leaves(tl.final_avg_params)):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(sim.train_loss, tl.train_loss)
+
+
+def test_mixing_strategies_and_inner_opts_run_unchanged():
+    """The engine drives the protocol registry: a non-dense strategy and a
+    stateful inner optimizer work through the strategy execution path."""
+    rates = [0.9] * 6 + [0.6] * 2
+    net, _ = baselines.mll_sgd("ring", [4, 4], tau=4, q=2, worker_rates=rates)
+    cfg = SimConfig(eta=0.05, batch_size=8, mixing="two_stage",
+                    inner_opt="momentum")
+    res = _run_tl(net, MLLSchedule(tau=4, q=2), "barrier", slots=64, cfg=cfg)
+    assert res.train_loss[-1] < res.train_loss[0]
+
+
+# ------------------------------------------------- (b) slot accounting
+def test_barrier_accounting_matches_legacy_draws_exactly():
+    """Shared numpy Generator -> the barrier policy's per-round costs are
+    the very same NegBin draws `barrier_round_slots` makes."""
+    rates = [0.9] * 18 + [0.6] * 2
+    net, _ = baselines.mll_sgd("complete", [20], tau=8, q=1,
+                               worker_rates=rates)
+    plan = get_policy("barrier").plan(net, MLLSchedule(tau=8, q=1), 256,
+                                      np.random.default_rng(7))
+    legacy = barrier_round_slots(np.random.default_rng(7), np.asarray(rates),
+                                 8, plan.rounds_completed)
+    np.testing.assert_array_equal(plan.round_costs, legacy)
+    assert plan.slots_used == legacy.sum() <= 256
+    # the deprecated simulator alias forwards to the same implementation
+    np.testing.assert_array_equal(
+        simulator.barrier_round_slots(np.random.default_rng(7),
+                                      np.asarray(rates), 8,
+                                      plan.rounds_completed), legacy)
+
+
+def test_deadline_accounting_is_mll_round_slots():
+    net, _ = baselines.mll_sgd("complete", [4, 4], tau=8, q=2)
+    plan = get_policy("deadline").plan(net, MLLSchedule(tau=8, q=2), 80,
+                                       np.random.default_rng(0))
+    np.testing.assert_array_equal(plan.round_costs, mll_round_slots(8, 10))
+    np.testing.assert_array_equal(plan.round_costs,
+                                  simulator.mll_round_slots(8, 10))
+    assert plan.rounds_completed == 10
+    assert plan.idle_slots.sum() == 0
+
+
+def test_barrier_idle_slots_are_the_straggler_tail():
+    """busy + idle = total round slots for every worker, and with mixed
+    rates the fast workers accumulate idle (waiting) slots."""
+    rates = [1.0] * 6 + [0.5] * 2
+    net, _ = baselines.mll_sgd("complete", [8], tau=8, q=1,
+                               worker_rates=rates)
+    plan = get_policy("barrier").plan(net, MLLSchedule(tau=8, q=1), 512,
+                                      np.random.default_rng(1))
+    total = plan.round_costs.sum()
+    np.testing.assert_array_equal(plan.busy_slots + plan.idle_slots,
+                                  np.full(8, total))
+    assert plan.idle_slots[:6].min() > 0        # fast workers wait
+    assert (plan.busy_slots[:6] == 8 * plan.rounds_completed).all()
+
+
+def test_deterministic_rate_model():
+    """rate_model='deterministic': a p=0.5 worker needs exactly 2*tau slots
+    per round, so every barrier round costs ceil(tau / p_min)."""
+    rates = [1.0, 1.0, 0.5, 1.0]
+    net, _ = baselines.mll_sgd("complete", [4], tau=6, q=1,
+                               worker_rates=rates)
+    plan = get_policy("barrier").plan(net, MLLSchedule(tau=6, q=1), 60,
+                                      np.random.default_rng(0),
+                                      rate_model="deterministic")
+    assert (plan.round_costs == 12).all()
+    assert plan.rounds_completed == 5
+    with pytest.raises(ValueError, match="unknown rate model"):
+        get_policy("barrier").plan(net, MLLSchedule(tau=6, q=1), 60,
+                                   np.random.default_rng(0),
+                                   rate_model="warp")
+
+
+# ------------------------------------------------------- gossip semantics
+def test_gossip_rounds_overlap_across_subnets():
+    """With heterogeneous rates the sub-networks' V rounds interleave on the
+    slot clock instead of firing in lock step, and hub gossip only ever
+    involves ready neighbor groups."""
+    rates = [0.95] * 4 + [0.55] * 4
+    net, _ = baselines.mll_sgd("complete", [4, 4], tau=4, q=2,
+                               worker_rates=rates)
+    res = _run_tl(net, MLLSchedule(tau=4, q=2), "gossip", slots=96,
+                  policy_rng=np.random.default_rng(5))
+    plan = res.plan
+    v_slots = {d: [e.slot for e in plan.events
+                   if e.kind == "subnet" and e.participants == (d,)]
+               for d in (0, 1)}
+    assert v_slots[0] and v_slots[1]
+    # the fast subnet completes strictly more rounds in the same budget
+    assert len(v_slots[0]) > len(v_slots[1])
+    assert v_slots[0] != v_slots[1]              # genuinely overlapping
+    for ev in plan.events:
+        if ev.kind == "hub":
+            assert len(ev.participants) >= 2
+    assert res.train_loss[-1] < res.train_loss[0]
+
+
+def test_partial_operators_are_valid_averagings():
+    """Masked operators: column-stochastic, identity on non-participants."""
+    net, _ = baselines.mll_sgd("ring", [2, 3, 2], tau=4, q=1)
+    v0 = _subnet_v_matrix(net, 0)
+    np.testing.assert_allclose(v0.sum(axis=0), 1.0, atol=1e-12)
+    np.testing.assert_array_equal(v0[2:, 2:], np.eye(5))
+    z = _partial_z_matrix(net, (0, 1))
+    np.testing.assert_allclose(z.sum(axis=0), 1.0, atol=1e-12)
+    np.testing.assert_array_equal(z[:, 5:], np.eye(7)[:, 5:])  # subnet 2 idle
+    assert (z[5:, :5] == 0).all()   # ready columns never read non-ready rows
+
+
+def test_gossip_preserves_weighted_average_within_group():
+    """A partial Z with uniform weights preserves the participants' mean:
+    mixing cannot create mass (H columns renormalized over the ready set)."""
+    net, _ = baselines.mll_sgd("complete", [2, 2], tau=2, q=1)
+    z = _partial_z_matrix(net, (0, 1))
+    x = np.random.default_rng(0).normal(size=(4, 5))
+    mixed = np.einsum("ij,i...->j...", z, x)
+    np.testing.assert_allclose(mixed.mean(axis=0), x.mean(axis=0), atol=1e-9)
+
+
+def test_gossip_requires_dense_mixing():
+    net, _ = baselines.mll_sgd("complete", [4, 4], tau=4, q=2)
+    with pytest.raises(ValueError, match="dense"):
+        _run_tl(net, MLLSchedule(tau=4, q=2), "gossip", slots=16,
+                cfg=SimConfig(eta=0.1, batch_size=8, mixing="two_stage"))
+
+
+# ----------------------------------------------------- wall-clock baselines
+def test_async_local_sgd_baseline():
+    net, sched, policy = baselines.async_local_sgd(
+        8, tau=8, worker_rates=[0.9] * 6 + [0.6] * 2)
+    assert policy == "deadline" and sched.q == 1
+    res = _run_tl(net, sched, policy, slots=64)
+    assert res.plan.rounds_completed == 8
+    assert res.train_loss[-1] < res.train_loss[0]
+
+
+def test_gossip_sgd_baseline():
+    net, sched, policy = baselines.gossip_sgd(
+        6, tau=8, worker_rates=[1.0, 0.9, 0.8, 0.9, 1.0, 0.7])
+    assert policy == "gossip" and net.num_subnets == 6
+    res = _run_tl(net, sched, policy, slots=64,
+                  policy_rng=np.random.default_rng(2))
+    hub_events = [e for e in res.plan.events if e.kind == "hub"]
+    assert hub_events, "neighbor-ready gossip never fired"
+    assert res.train_loss[-1] < res.train_loss[0]
+
+
+# ------------------------------------------------------------ engine plumbing
+def test_pallas_kernel_path_through_timeline():
+    """The barrier policy composes with the fused Pallas backend (interpret
+    mode on CPU) and keeps the per-worker update counts advancing."""
+    net, _ = baselines.mll_sgd("complete", [4, 4], tau=4, q=2)
+    sched = MLLSchedule(tau=4, q=2)
+    cfg = SimConfig(eta=0.1, batch_size=8, kernel="pallas")
+    data, loss_fn, acc_fn, init = _task(8)
+    res_k = run_timeline(loss_fn, acc_fn, init, data.worker_data(),
+                         data.full, data.test, net, sched, slots=16,
+                         policy="barrier", cfg=cfg, seed=0)
+    res_x = run_timeline(loss_fn, acc_fn, init, data.worker_data(),
+                         data.full, data.test, net, sched, slots=16,
+                         policy="barrier", cfg=SimConfig(eta=0.1, batch_size=8),
+                         seed=0)
+    for a, b in zip(jax.tree.leaves(res_k.final_avg_params),
+                    jax.tree.leaves(res_x.final_avg_params)):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_truncated_budget_drops_unfinished_round():
+    """A round that does not fit the slot budget never fires its averaging
+    (legacy budget-loop semantics)."""
+    rates = [0.6] * 4
+    net, _ = baselines.mll_sgd("complete", [4], tau=8, q=1,
+                               worker_rates=rates)
+    plan = get_policy("barrier").plan(net, MLLSchedule(tau=8, q=1), 20,
+                                      np.random.default_rng(3))
+    assert plan.slots_used <= 20
+    assert all(e.slot <= 20 for e in plan.events)
+    assert len(plan.events) == plan.rounds_completed
+
+
+def test_plan_shapes_and_event_trace():
+    net, _ = baselines.mll_sgd("star", [3, 3, 3], tau=3, q=2,
+                               worker_rates=[0.8] * 9)
+    plan = get_policy("barrier").plan(net, MLLSchedule(tau=3, q=2), 90,
+                                      np.random.default_rng(0))
+    assert isinstance(plan, TimelinePlan)
+    assert plan.active.shape == (90, 9) and plan.op_ids.shape == (90,)
+    kinds = [e.kind for e in plan.events]
+    # every q-th completed round is a hub round
+    assert kinds == ["hub" if (i + 1) % 2 == 0 else "subnet"
+                     for i in range(len(kinds))]
