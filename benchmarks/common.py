@@ -10,6 +10,8 @@ reduced for the single-CPU container (workers 20 vs 100, steps ~1-2k vs 32k);
 from __future__ import annotations
 
 import dataclasses
+import json
+import pathlib
 import time
 
 import jax
@@ -88,11 +90,78 @@ def run_sim(net: MultiLevelNetwork, sched: MLLSchedule, scale: BenchScale,
                     seed=seed)
 
 
+# Every emit() is also recorded so benchmark runners can snapshot a
+# machine-readable BENCH_<name>.json at the repo root (the perf trajectory
+# the nightly regression gate diffs against).  ``_RECORDS`` is the whole-
+# process stream (what `benchmarks.run` snapshots); `begin_bench` opens a
+# per-bench namespace so an individual bench's snapshot can't absorb
+# metrics another bench emitted earlier in the same process.
+_RECORDS: dict[str, dict] = {}
+_BENCH_RECORDS: dict[str, dict[str, dict]] = {}
+_CURRENT_BENCH: str | None = None
+
+
+def begin_bench(bench: str) -> None:
+    """Route subsequent emit() records into the ``bench`` namespace too
+    (fresh: re-entering clears a previous run's records)."""
+    global _CURRENT_BENCH
+    _CURRENT_BENCH = bench
+    _BENCH_RECORDS[bench] = {}
+
+
+def end_bench(bench: str | None = None) -> None:
+    """Stop routing emit() records into the current bench namespace (pass
+    ``bench`` to close only if it is still the current one).  Without this,
+    a later bench in the same process would leak its emits into the earlier
+    bench's records."""
+    global _CURRENT_BENCH
+    if bench is None or bench == _CURRENT_BENCH:
+        _CURRENT_BENCH = None
+
+
+def bench_records(bench: str) -> dict[str, dict]:
+    return dict(_BENCH_RECORDS.get(bench, {}))
+
+
 def emit(name: str, value, *, t0: float | None = None, extra: str = ""):
-    """CSV line: name,value[,seconds][,extra]."""
+    """CSV line: name,value[,seconds][,extra].  Also recorded for
+    `write_bench_json`."""
     parts = [name, f"{value:.6f}" if isinstance(value, float) else str(value)]
+    rec: dict = {"value": float(value) if isinstance(value, (int, float,
+                 np.integer, np.floating)) else value}
     if t0 is not None:
         parts.append(f"{time.time() - t0:.1f}s")
+        rec["seconds"] = round(time.time() - t0, 3)
     if extra:
         parts.append(extra)
+    _RECORDS[name] = rec
+    if _CURRENT_BENCH is not None:
+        _BENCH_RECORDS[_CURRENT_BENCH][name] = rec
     print(",".join(parts), flush=True)
+
+
+def repo_root() -> pathlib.Path:
+    return pathlib.Path(__file__).resolve().parents[1]
+
+
+def bench_json_path(bench: str) -> pathlib.Path:
+    return repo_root() / f"BENCH_{bench}.json"
+
+
+def write_bench_json(bench: str, records: dict | None = None) -> pathlib.Path:
+    """Dump ``name -> {value[, seconds]}`` as BENCH_<bench>.json at the repo
+    root, so every future PR appends to a comparable perf trajectory."""
+    path = bench_json_path(bench)
+    data = dict(_RECORDS) if records is None else records
+    path.write_text(json.dumps(data, indent=1, sort_keys=True) + "\n")
+    print(f"wrote {path}", flush=True)
+    return path
+
+
+def load_bench_json(bench: str) -> dict | None:
+    """The committed BENCH_<bench>.json (None when absent) — the baseline a
+    regression gate compares fresh numbers against."""
+    path = bench_json_path(bench)
+    if not path.exists():
+        return None
+    return json.loads(path.read_text())

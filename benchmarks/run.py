@@ -45,6 +45,9 @@ def main(argv=None):
         bench_protocol.main(full=args.full)
     print("# roofline")
     roofline.main([])
+    # machine-readable snapshot of every emitted metric (perf trajectory)
+    from benchmarks import common
+    common.write_bench_json("run")
     print(f"total,{time.time() - t0:.1f}s")
 
 

@@ -1,0 +1,157 @@
+"""Flat packing of stacked (worker-leading) pytrees into one (W, C) buffer.
+
+The protocol hot path applies the same per-worker linear algebra to every
+leaf of a stacked parameter pytree: a (W, W) operator contraction, a
+weighted average, a gated SGD update.  Dispatching those per leaf costs one
+kernel launch / HLO op per leaf and — for the Pallas path — re-fetches the
+(W, W) operator and tile-pads every tiny bias leaf separately.  This module
+defines the **packing contract** shared by the XLA flat path
+(`apply_operator_packed`, `weighted_average_packed`, used by
+`protocol.DenseMixing` and `simulator.apply_operator`/`weighted_average`)
+and the single-launch Pallas kernel (`kernels.hier_mix.hier_mix_packed`):
+
+  * A `PackSpec` is cached per (treedef, leaf shapes/dtypes): leaf i of the
+    stacked tree owns columns ``[offset_i, offset_i + size_i)`` of a
+    (W, total_cols) float32 buffer, in ``jax.tree.leaves`` order.
+  * `pack` casts every leaf to float32 and concatenates the flattened
+    per-worker rows; `unpack` slices, reshapes, and casts back to each
+    leaf's dtype.  Round-tripping is exact for float32 leaves and a single
+    f32->leaf-dtype rounding for everything else — the same rounding the
+    per-leaf f32-accumulating kernels already perform, so packed and
+    per-leaf execution agree bit for bit.
+  * Worker-axis contractions on the packed buffer (one (W, W) x (W, C)
+    matmul) replace one dispatch per leaf.
+
+The fast paths only engage when every leaf is float32 (`all_f32`); mixed or
+low-precision trees keep the per-leaf semantics of their caller.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSlot:
+    """Column range of one stacked leaf inside the packed buffer."""
+    offset: int
+    size: int                  # columns = prod(shape[1:]) (1 for (W,) leaves)
+    shape: tuple[int, ...]     # full stacked shape, worker axis leading
+    dtype: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class PackSpec:
+    """Cached layout of a stacked pytree inside a (W, total_cols) buffer."""
+    treedef: Any
+    num_workers: int
+    total_cols: int
+    slots: tuple[LeafSlot, ...]
+
+
+@functools.lru_cache(maxsize=256)
+def _build_spec(treedef, meta: tuple) -> PackSpec:
+    if any(not shape for shape, _ in meta) or \
+            len({shape[0] for shape, _ in meta}) != 1:
+        raise ValueError(
+            f"every stacked leaf needs the same leading worker axis; "
+            f"got shapes with first dims {[m[0][:1] for m in meta]}")
+    slots, off = [], 0
+    w = meta[0][0][0]
+    for shape, dtype in meta:
+        size = 1
+        for d in shape[1:]:
+            size *= d
+        slots.append(LeafSlot(off, size, shape, dtype))
+        off += size
+    return PackSpec(treedef, w, off, tuple(slots))
+
+
+def pack_spec(stacked: PyTree) -> PackSpec:
+    """Layout for a stacked tree (cached per treedef + leaf shapes/dtypes)."""
+    leaves, treedef = jax.tree.flatten(stacked)
+    if not leaves:
+        raise ValueError("cannot pack an empty pytree")
+    meta = tuple((tuple(x.shape), jnp.dtype(x.dtype)) for x in leaves)
+    return _build_spec(treedef, meta)
+
+
+def all_f32(stacked: PyTree) -> bool:
+    """True when every leaf is float32 — the gating condition for the flat
+    fast paths.  pack/unpack round-trips and the packed Pallas kernel are
+    then exactly bit-compatible with their per-leaf equivalents; the XLA
+    flat einsums (`apply_operator_packed` / `weighted_average_packed`) keep
+    the same f32 precision but XLA may reduce the fused (W, sum C) buffer in
+    a different order than per-leaf einsums, so those agree to reduction
+    order (tested at 1e-6), not necessarily to the ULP."""
+    return all(x.dtype == jnp.float32 for x in jax.tree.leaves(stacked))
+
+
+# The flat paths trade one dispatch per leaf for two packed-buffer copies.
+# That wins where launch/dispatch count is the bottleneck (TPU) and loses
+# where copy bandwidth is (CPU: BENCH_round.json prices the per-leaf path
+# 2.5-8.5x faster there), so auto mode follows the backend.
+_FLAT_OVERRIDE: bool | None = None
+
+
+def set_flat_paths(enabled: bool | None) -> None:
+    """Force the flat mixing paths on/off (None = auto: TPU only)."""
+    global _FLAT_OVERRIDE
+    _FLAT_OVERRIDE = enabled
+
+
+def flat_paths_enabled() -> bool:
+    if _FLAT_OVERRIDE is not None:
+        return _FLAT_OVERRIDE
+    return jax.default_backend() == "tpu"
+
+
+def pack(stacked: PyTree, spec: PackSpec | None = None) -> jnp.ndarray:
+    """Stacked tree -> (W, total_cols) float32 buffer (leaf order)."""
+    spec = spec or pack_spec(stacked)
+    leaves = jax.tree.leaves(stacked)
+    if len(leaves) == 1:
+        return leaves[0].reshape(spec.num_workers, -1).astype(jnp.float32)
+    return jnp.concatenate(
+        [x.reshape(spec.num_workers, -1).astype(jnp.float32)
+         for x in leaves], axis=1)
+
+
+def unpack(buf: jnp.ndarray, spec: PackSpec) -> PyTree:
+    """(W, >= total_cols) buffer -> stacked tree (extra columns ignored,
+    e.g. lane padding added by the Pallas kernel)."""
+    leaves = [buf[:spec.num_workers, s.offset:s.offset + s.size]
+              .reshape(s.shape).astype(s.dtype) for s in spec.slots]
+    return jax.tree.unflatten(spec.treedef, leaves)
+
+
+def unpack_row(row: jnp.ndarray, spec: PackSpec) -> PyTree:
+    """(total_cols,) reduced buffer -> tree WITHOUT the worker axis (the
+    `weighted_average` result layout)."""
+    leaves = [row[s.offset:s.offset + s.size].reshape(s.shape[1:])
+              .astype(s.dtype) for s in spec.slots]
+    return jax.tree.unflatten(spec.treedef, leaves)
+
+
+# ------------------------------------------------------------ XLA flat paths
+def apply_operator_packed(stacked: PyTree, t: jnp.ndarray) -> PyTree:
+    """X <- X T as ONE (W, W) x (W, C) einsum over the packed buffer instead
+    of one dispatch per leaf.  Caller guarantees `all_f32(stacked)`."""
+    spec = pack_spec(stacked)
+    buf = pack(stacked, spec)
+    out = jnp.einsum("ij,ic->jc", t.astype(jnp.float32), buf)
+    return unpack(out, spec)
+
+
+def weighted_average_packed(stacked: PyTree, a: jnp.ndarray) -> PyTree:
+    """u = X a as one (W,) x (W, C) contraction over the packed buffer.
+    Caller guarantees `all_f32(stacked)`."""
+    spec = pack_spec(stacked)
+    buf = pack(stacked, spec)
+    return unpack_row(jnp.einsum("i,ic->c", a.astype(jnp.float32), buf), spec)

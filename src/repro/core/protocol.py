@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import packing
 from repro.optim import optimizers as optim_mod
 
 PyTree = Any
@@ -107,6 +108,14 @@ def gated_sgd_update(stacked: PyTree, grads: PyTree, theta: jnp.ndarray,
 
 def _einsum_operator(t: jnp.ndarray, stacked: PyTree,
                      mix_dtype: str | None) -> PyTree:
+    # flat fast path: one (W, W) x (W, C) einsum over the packed buffer
+    # (`repro.core.packing`) instead of a dispatch per leaf.  Engaged only
+    # where dispatch count is the bottleneck (TPU / explicit override) and
+    # when it is semantics-preserving: every leaf f32 and f32 mixing.
+    if packing.flat_paths_enabled() and mix_dtype in (None, "float32") \
+            and packing.all_f32(stacked):
+        return packing.apply_operator_packed(stacked, t)
+
     def mix(x):
         xm = x.astype(mix_dtype) if mix_dtype else x
         y = jnp.einsum("ij,i...->j...", t.astype(xm.dtype), xm)

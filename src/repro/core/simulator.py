@@ -33,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.hierarchy import MLLSchedule, MultiLevelNetwork
-from repro.core import protocol
+from repro.core import packing, protocol
 from repro.optim import optimizers as optim_mod
 
 PyTree = Any
@@ -46,12 +46,24 @@ def replicate(params: PyTree, num_workers: int) -> PyTree:
 
 
 def weighted_average(stacked: PyTree, a: jnp.ndarray) -> PyTree:
-    """u = X a : the paper's weighted average model (Eq. 8)."""
+    """u = X a : the paper's weighted average model (Eq. 8).
+
+    On dispatch-bound backends (TPU; `packing.flat_paths_enabled`) all-f32
+    trees take the packed flat path: one (W,) x (W, C) contraction over the
+    packed buffer instead of a tensordot per leaf."""
+    if packing.flat_paths_enabled() and packing.all_f32(stacked):
+        return packing.weighted_average_packed(stacked, a)
     return jax.tree.map(lambda x: jnp.tensordot(a, x, axes=1), stacked)
 
 
 def apply_operator(stacked: PyTree, t: jnp.ndarray) -> PyTree:
-    """X <- X T for stacked leaves (leaf[i] = column x^(i)): new[j] = sum_i T[i,j] x_i."""
+    """X <- X T for stacked leaves (leaf[i] = column x^(i)): new[j] = sum_i T[i,j] x_i.
+
+    On dispatch-bound backends (TPU; `packing.flat_paths_enabled`) all-f32
+    trees take the packed flat path: ONE (W, W) x (W, C) einsum over the
+    packed buffer replaces the per-leaf dispatch loop."""
+    if packing.flat_paths_enabled() and packing.all_f32(stacked):
+        return packing.apply_operator_packed(stacked, t)
     return jax.tree.map(lambda x: jnp.einsum("ij,i...->j...", t, x), stacked)
 
 
@@ -66,6 +78,8 @@ class SimConfig:
     inner_opt: str = "sgd"        # any repro.optim.optimizers optimizer
     inner_opt_args: tuple = ()    # ((key, value), ...) extra kwargs
     kernel: str = "xla"           # "xla" | "pallas" (fused update+mix)
+    block_c: int = 512            # pallas lane-block size (raise on CPU:
+                                  # interpret mode pays per-grid-step cost)
 
 
 @dataclasses.dataclass
@@ -94,15 +108,21 @@ def _sim_strategy(cfg: SimConfig) -> protocol.MixingStrategy:
     return protocol.resolve_mixing(cfg)
 
 
-def _check_kernel(cfg: SimConfig) -> None:
+def _check_kernel(cfg: SimConfig, *, structured_ok: bool = False) -> None:
     if cfg.kernel not in ("xla", "pallas"):
         raise ValueError(f"unknown kernel {cfg.kernel!r}; expected xla|pallas")
-    if cfg.kernel == "pallas" and (cfg.inner_opt != "sgd"
-                                   or cfg.mixing != "dense"
-                                   or cfg.mix_dtype is not None):
-        raise ValueError("kernel='pallas' fuses the plain-SGD update with the "
-                         "dense f32 operator contraction; it requires "
-                         "inner_opt='sgd', mixing='dense', and mix_dtype=None")
+    if cfg.kernel != "pallas":
+        return
+    mixings = ("dense", "two_stage", "ppermute") if structured_ok \
+        else ("dense",)
+    if (cfg.inner_opt != "sgd" or cfg.mixing not in mixings
+            or cfg.mix_dtype is not None):
+        raise ValueError(
+            "kernel='pallas' fuses the plain-SGD update with the f32 "
+            "operator contraction; it requires inner_opt='sgd', "
+            f"mix_dtype=None, and mixing in {mixings} (the structured "
+            "two_stage/ppermute fusions run through the event-sparse "
+            "timeline executor only)")
 
 
 def make_step_fn(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
@@ -128,7 +148,7 @@ def make_step_fn(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
     from repro.core.timeline import make_timeline_step_fn
     n = network.num_workers
     scan_slots = make_timeline_step_fn(loss_fn, network, cfg,
-                                       gate_mode="bernoulli", dense_ops=False)
+                                       gate_mode="bernoulli")
 
     def scan_steps(carry, data, op_ids):
         ones = jnp.ones((op_ids.shape[0], n), jnp.float32)

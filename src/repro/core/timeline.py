@@ -44,20 +44,37 @@ reproduces the lock-step trajectory bit for bit.  Policies that mix a
 strict subset of workers (``"gossip"``) build masked dense operators and
 therefore require ``mixing="dense"`` — the same restriction unequal-size
 sub-networks already carry.
+
+Execution is **event-sparse** by default (`EventExecutor`): the slot scan
+is segmented at the plan's mixing events, so the (vast majority of)
+local-only slots run just the gated inner update — no ``lax.switch``, no
+identity operator contraction, no (L, W, W) identity-padded operator
+stack — while each event applies its operator once with the phase known
+statically.  Per-slot PRNG consumption is identical to the full scan, so
+trajectories are bit-for-bit equal (``exec_mode="full"`` keeps the
+every-slot scan as the reference/benchmark baseline for op-id plans).
+The Pallas backend executes events through the packed single-launch
+kernel: the whole parameter/grad pytree flattens into one (W, sum C_i)
+f32 buffer under the `repro.core.packing` contract and the operator is
+fetched once per event — dense (W, W) matrices for ``mixing="dense"``
+(including gossip's per-event masked operators) or fused
+`GroupedOperator`s for the structured ``two_stage`` / ``ppermute``
+strategies (`kernels.hier_mix`).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import protocol
+from repro.core import packing, protocol
 from repro.core.hierarchy import MLLSchedule, MultiLevelNetwork
-from repro.core.simulator import SimConfig, _check_kernel, init_sim_carry, \
-    replicate, weighted_average
+from repro.core.simulator import SimConfig, _check_kernel, apply_operator, \
+    init_sim_carry, replicate, weighted_average
 
 PyTree = Any
 
@@ -422,76 +439,119 @@ class NeighborReadyGossipPolicy(ReadinessPolicy):
 
 
 # ---------------------------------------------------------------- execution
-def make_timeline_step_fn(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
-                          network: MultiLevelNetwork, cfg: SimConfig, *,
-                          gate_mode: str, dense_ops: bool):
-    """Jitted scan over slots; mirrors `simulator.make_step_fn` (identical
-    PRNG consumption per slot, so trajectories are bit-for-bit comparable)
-    with two extensions: a per-slot ``active`` mask multiplying (bernoulli)
-    or replacing (forced) the gate draw, and — for ``dense_ops`` — a per-slot
-    dense (W, W) operator instead of the strategy's lax.switch.
+def _pallas_opt_state(opt_state, theta):
+    """Engine-owned bookkeeping for the kernel path: the fused kernel owns
+    the parameter update, but the per-worker step counts advance exactly as
+    `protocol.gated_inner_update` would (single source of truth — PR 2
+    fixed a backend divergence in precisely this update)."""
+    return {"inner": opt_state["inner"],
+            "counts": opt_state["counts"] + (theta != 0).astype(jnp.int32)}
 
-    Signature: ``scan_slots(carry, data, ops, active) -> carry`` where
-    ``ops`` is (L,) int32 op ids or (L, W, W) float32 operators and
-    ``carry`` is the simulator's (`init_sim_carry`) layout.
-    """
+
+def _slot_parts(loss_fn, network: MultiLevelNetwork, cfg: SimConfig, *,
+                gate_mode: str):
+    """Shared per-slot machinery: the gradient/gate sampler (identical PRNG
+    consumption to `simulator.make_step_fn`, so every executor built from it
+    is bit-for-bit comparable) and the local (mixing-free) update."""
     if gate_mode not in ("bernoulli", "forced"):
         raise ValueError(f"unknown gate_mode {gate_mode!r}")
-    _check_kernel(cfg)
-    if dense_ops and cfg.mixing != "dense":
-        raise ValueError(
-            "policies with partial-participation events (needs_dense) build "
-            "masked dense operators; they require mixing='dense' — like "
-            "unequal-size sub-networks")
     n = network.num_workers
     p_rates = jnp.asarray(network.worker_rates, dtype=jnp.float32)
-    st = protocol.state_from_network(network)
     optimizer = protocol.resolve_inner_optimizer(cfg)
+    grad_fn = jax.grad(loss_fn)
+    eta = cfg.eta
+
+    def sample(stacked, key, data, act):
+        """(grads, theta, key') for one slot — consumes exactly the full
+        scan's randomness: (kb, kg) split, per-worker batch keys, gate."""
+        key, kb, kg = jax.random.split(key, 3)
+        wkeys = jax.random.split(kb, n)
+
+        def worker_grad(wparams, wdata, wkey):
+            nsamp = jax.tree.leaves(wdata)[0].shape[0]
+            idx = jax.random.randint(wkey, (cfg.batch_size,), 0, nsamp)
+            batch = jax.tree.map(lambda x: x[idx], wdata)
+            return grad_fn(wparams, batch)
+
+        grads = jax.vmap(worker_grad)(stacked, data, wkeys)
+        draw = (jax.random.uniform(kg, (n,)) < p_rates).astype(jnp.float32)
+        theta = draw * act if gate_mode == "bernoulli" else act
+        return grads, theta, key
+
+    def local_update(stacked, opt_state, grads, theta):
+        """Gated inner update only — the event-free slot body.  The Pallas
+        backend replicates the kernel's arithmetic exactly (f32 accumulate,
+        (eta * theta) * g grouping, one rounding to the leaf dtype) so that
+        skipping the identity contraction is bit-for-bit invisible."""
+        if cfg.kernel == "pallas":
+            th32 = theta.astype(jnp.float32)
+
+            def upd(x, g):
+                gate = th32.reshape(th32.shape + (1,) * (x.ndim - 1))
+                u = x.astype(jnp.float32) - eta * gate * g.astype(jnp.float32)
+                return u.astype(x.dtype)
+
+            stacked = jax.tree.map(upd, stacked, grads)
+            return stacked, _pallas_opt_state(opt_state, theta)
+        return protocol.gated_inner_update(optimizer, stacked, opt_state,
+                                           grads, theta)
+
+    return sample, local_update, optimizer
+
+
+def make_timeline_step_fn(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
+                          network: MultiLevelNetwork, cfg: SimConfig, *,
+                          gate_mode: str, pallas_packed: bool | None = None):
+    """Full (every-slot) jitted scan; mirrors `simulator.make_step_fn`
+    (identical PRNG consumption per slot, so trajectories are bit-for-bit
+    comparable) with a per-slot ``active`` mask multiplying (bernoulli) or
+    replacing (forced) the gate draw.
+
+    Signature: ``scan_slots(carry, data, ops, active) -> carry`` where
+    ``ops`` is (L,) int32 op ids and ``carry`` is the simulator's
+    (`init_sim_carry`) layout.  This is the lock-step reference executor
+    (and the `exec_mode="full"` benchmark baseline); `run_timeline`'s
+    default event-sparse path skips the per-slot `lax.switch` entirely.
+    ``pallas_packed`` picks the kernel launch granularity for the every-slot
+    scan: packed (ONE launch per slot) trades two buffer copies for fewer
+    launches — the same tradeoff the XLA flat paths gate on — so the default
+    (None) follows `packing.flat_paths_enabled()`; both produce bit-identical
+    results (``False`` = the legacy per-leaf loop, the benchmark baseline).
+    """
+    _check_kernel(cfg)
+    if pallas_packed is None:
+        pallas_packed = packing.flat_paths_enabled()
+    n = network.num_workers
+    st = protocol.state_from_network(network)
     strategy = protocol.resolve_mixing(cfg)
-    if cfg.kernel == "pallas" and not dense_ops:
+    sample, local_update, optimizer = _slot_parts(loss_fn, network, cfg,
+                                                  gate_mode=gate_mode)
+    if cfg.kernel == "pallas":
         operators = jnp.stack([jnp.eye(n, dtype=jnp.float32),
                                st.v_op, st.z_op])
-    grad_fn = jax.grad(loss_fn)
 
     @jax.jit
     def scan_slots(carry, data, ops, active):
         def body(carry, xs):
             op, act = xs
             stacked, opt_state, mix_state, key = carry
-            key, kb, kg = jax.random.split(key, 3)
-            wkeys = jax.random.split(kb, n)
-
-            def worker_grad(wparams, wdata, wkey):
-                nsamp = jax.tree.leaves(wdata)[0].shape[0]
-                idx = jax.random.randint(wkey, (cfg.batch_size,), 0, nsamp)
-                batch = jax.tree.map(lambda x: x[idx], wdata)
-                return grad_fn(wparams, batch)
-
-            grads = jax.vmap(worker_grad)(stacked, data, wkeys)
-            draw = (jax.random.uniform(kg, (n,)) < p_rates).astype(jnp.float32)
-            theta = draw * act if gate_mode == "bernoulli" else act
+            grads, theta, key = sample(stacked, key, data, act)
 
             if cfg.kernel == "pallas":
                 from repro.kernels import ops as kops
-                t = op if dense_ops else operators[op]
-                stacked = kops.hier_mix_pytree(stacked, grads, t, theta,
-                                               cfg.eta)
-                opt_state = {"inner": opt_state["inner"],
-                             "counts": opt_state["counts"]
-                             + (theta != 0).astype(jnp.int32)}
+                mix = (kops.hier_mix_packed if pallas_packed
+                       else kops.hier_mix_pytree)
+                stacked = mix(stacked, grads, operators[op], theta, cfg.eta,
+                              block_c=cfg.block_c)
+                opt_state = _pallas_opt_state(opt_state, theta)
             else:
                 stacked, opt_state = protocol.gated_inner_update(
                     optimizer, stacked, opt_state, grads, theta)
-                if dense_ops:
-                    stacked = jax.tree.map(
-                        lambda x: jnp.einsum("ij,i...->j...",
-                                             op.astype(x.dtype), x), stacked)
-                else:
-                    stacked, mix_state = jax.lax.switch(op, [
-                        lambda p, s: (p, s),
-                        lambda p, s: strategy.subnet_with_state(p, st, s),
-                        lambda p, s: strategy.hub_with_state(p, st, s),
-                    ], stacked, mix_state)
+                stacked, mix_state = jax.lax.switch(op, [
+                    lambda p, s: (p, s),
+                    lambda p, s: strategy.subnet_with_state(p, st, s),
+                    lambda p, s: strategy.hub_with_state(p, st, s),
+                ], stacked, mix_state)
             return (stacked, opt_state, mix_state, key), None
 
         carry, _ = jax.lax.scan(body, carry, (ops, active))
@@ -500,15 +560,135 @@ def make_timeline_step_fn(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
     return scan_slots
 
 
-def _chunk_ops(plan: TimelinePlan, lo: int, hi: int, num_workers: int, *,
-               dense: bool) -> jnp.ndarray:
-    """Per-slot operators for slots [lo, hi): ids (strategy path) or stacked
-    dense matrices (identity on event-free slots)."""
-    if not dense:
-        return jnp.asarray(plan.op_ids[lo:hi])
-    eye = np.eye(num_workers, dtype=np.float32)
-    mats = np.stack([(plan.op_mats or {}).get(s, eye) for s in range(lo, hi)])
-    return jnp.asarray(mats)
+class EventExecutor:
+    """Event-sparse slot execution: local-only slots run ONLY the gated
+    inner update (no operator contraction, no `lax.switch`); mixing runs
+    once per event with the operator known statically.
+
+    Built from the same per-slot sampler as the full scan, so a plan
+    executed event-sparsely produces the bit-for-bit identical trajectory:
+    every slot consumes the same PRNG stream and applies the same update;
+    only the identity contractions and the per-slot branch disappear.
+
+    Local runs are decomposed into power-of-two segments, bounding jit
+    recompilation at O(log max_chunk) local-scan variants plus one compiled
+    step per event kind — independent of how the readiness policy scatters
+    its events.  The Pallas backend executes events through the packed
+    single-launch kernel (`kernels.hier_mix.hier_mix_packed`): dense (W, W)
+    operators for ``mixing="dense"`` (including per-event masked gossip
+    matrices) and fused `GroupedOperator`s for the structured
+    ``two_stage`` / ``ppermute`` strategies.
+    """
+
+    def __init__(self, loss_fn, network: MultiLevelNetwork, cfg: SimConfig,
+                 *, gate_mode: str):
+        _check_kernel(cfg, structured_ok=True)
+        self.cfg = cfg
+        self.st = protocol.state_from_network(network)
+        self.strategy = protocol.resolve_mixing(cfg)
+        self._sample, self._local_update, self.optimizer = _slot_parts(
+            loss_fn, network, cfg, gate_mode=gate_mode)
+        if cfg.kernel == "pallas":
+            from repro.kernels import ops as kops
+            self._kops = kops
+            if cfg.mixing == "dense":
+                self._phase_ops = {protocol.PHASE_SUBNET: self.st.v_op,
+                                   protocol.PHASE_HUB: self.st.z_op}
+            else:           # two_stage / ppermute: fused structured operators
+                if cfg.mixing == "ppermute":
+                    protocol._circulant_coeffs(self.st)   # validate H
+                self._phase_ops = {
+                    protocol.PHASE_SUBNET: kops.make_grouped_operator(
+                        network.subnet_of, network.v),
+                    protocol.PHASE_HUB: kops.make_grouped_operator(
+                        network.subnet_of, network.v, h=network.hub_net.h),
+                }
+        self.scan_local = jax.jit(self._scan_local_impl)
+        self.step_phase = {
+            ph: jax.jit(functools.partial(self._step_event_impl, phase=ph))
+            for ph in (protocol.PHASE_SUBNET, protocol.PHASE_HUB)}
+        self.step_dense = jax.jit(self._step_dense_impl)
+
+    # ---- jitted bodies
+    def _scan_local_impl(self, carry, data, active):
+        def body(carry, act):
+            stacked, opt_state, mix_state, key = carry
+            grads, theta, key = self._sample(stacked, key, data, act)
+            stacked, opt_state = self._local_update(stacked, opt_state,
+                                                    grads, theta)
+            return (stacked, opt_state, mix_state, key), None
+
+        carry, _ = jax.lax.scan(body, carry, active)
+        return carry
+
+    def _mix_event(self, stacked, opt_state, mix_state, grads, theta, op):
+        if self.cfg.kernel == "pallas":
+            stacked = self._kops.hier_mix_packed(stacked, grads, op, theta,
+                                                 self.cfg.eta,
+                                                 block_c=self.cfg.block_c)
+            return stacked, _pallas_opt_state(opt_state, theta), mix_state
+        stacked, opt_state = protocol.gated_inner_update(
+            self.optimizer, stacked, opt_state, grads, theta)
+        if isinstance(op, jnp.ndarray) or hasattr(op, "shape"):
+            if packing.all_f32(stacked):
+                stacked = apply_operator(stacked, op)
+            else:
+                # legacy dense-path dtype semantics: mix in the leaf dtype
+                # (einsum with an f32 operator would promote bf16 leaves)
+                stacked = jax.tree.map(
+                    lambda x: jnp.einsum("ij,i...->j...",
+                                         op.astype(x.dtype), x), stacked)
+        elif op == protocol.PHASE_SUBNET:
+            stacked, mix_state = self.strategy.subnet_with_state(
+                stacked, self.st, mix_state)
+        else:
+            stacked, mix_state = self.strategy.hub_with_state(
+                stacked, self.st, mix_state)
+        return stacked, opt_state, mix_state
+
+    def _step_event_impl(self, carry, data, act, *, phase: int):
+        stacked, opt_state, mix_state, key = carry
+        grads, theta, key = self._sample(stacked, key, data, act)
+        op = (self._phase_ops[phase] if self.cfg.kernel == "pallas"
+              else phase)
+        stacked, opt_state, mix_state = self._mix_event(
+            stacked, opt_state, mix_state, grads, theta, op)
+        return (stacked, opt_state, mix_state, key)
+
+    def _step_dense_impl(self, carry, data, act, t):
+        stacked, opt_state, mix_state, key = carry
+        grads, theta, key = self._sample(stacked, key, data, act)
+        stacked, opt_state, mix_state = self._mix_event(
+            stacked, opt_state, mix_state, grads, theta, t)
+        return (stacked, opt_state, mix_state, key)
+
+    # ---- host-side driver
+    def run(self, carry, data, plan: TimelinePlan, lo: int, hi: int):
+        """Execute slots [lo, hi) of the plan event-sparsely."""
+        op_mats = plan.op_mats or {}
+        s = lo
+        while s < hi:
+            e = s
+            while e < hi and plan.op_ids[e] == 0 and e not in op_mats:
+                e += 1
+            run = e - s                       # local-only slots [s, e)
+            off = s
+            while run:
+                k = 1 << (run.bit_length() - 1)   # pow2 segments: O(log L)
+                carry = self.scan_local(
+                    carry, data, jnp.asarray(plan.active[off:off + k]))
+                off += k
+                run -= k
+            if e < hi:
+                act = jnp.asarray(plan.active[e])
+                if e in op_mats:
+                    carry = self.step_dense(carry, data, act,
+                                            jnp.asarray(op_mats[e]))
+                else:
+                    carry = self.step_phase[int(plan.op_ids[e])](
+                        carry, data, act)
+            s = e + 1
+        return carry
 
 
 @dataclasses.dataclass
@@ -534,7 +714,8 @@ def run_timeline(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
                  cfg: SimConfig = SimConfig(),
                  seed: int = 0,
                  policy_rng: np.random.Generator | None = None,
-                 rate_model: str = "bernoulli") -> TimelineResult:
+                 rate_model: str = "bernoulli",
+                 exec_mode: str = "event") -> TimelineResult:
     """Run the network against the slot clock for `slots` slots.
 
     ``policy_rng`` drives the policy's host-side progress draws (defaults to
@@ -542,6 +723,14 @@ def run_timeline(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
     `barrier_round_slots` accounting draw-for-draw.  ``seed`` also seeds the
     in-scan PRNG (minibatch sampling + Bernoulli gate), matching
     `simulator.simulate`'s stream.  Evaluates u every `cfg.eval_every` slots.
+
+    ``exec_mode="event"`` (default) runs the event-sparse executor: slots
+    between mixing events pay only the gated inner update, and each event
+    applies its operator once with the phase known statically — bit-for-bit
+    the same trajectory as the full scan, without the per-slot `lax.switch`
+    / identity contractions.  ``exec_mode="full"`` keeps the legacy
+    every-slot scan (benchmark baseline; op-id plans only — policies that
+    emit per-slot dense matrices have no full-scan form anymore).
     """
     pol = get_policy(policy) if isinstance(policy, str) else policy
     rng = policy_rng if policy_rng is not None else np.random.default_rng(seed)
@@ -551,9 +740,25 @@ def run_timeline(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
     stacked = replicate(init_params, n)
     carry = init_sim_carry(stacked, cfg, seed)
     dense = pol.needs_dense or plan.op_mats is not None
-    scan_slots = make_timeline_step_fn(loss_fn, network, cfg,
-                                       gate_mode=plan.gate_mode,
-                                       dense_ops=dense)
+    if dense and cfg.mixing != "dense":
+        raise ValueError(
+            "policies with partial-participation events (needs_dense) build "
+            "masked dense operators; they require mixing='dense' — like "
+            "unequal-size sub-networks")
+    if exec_mode == "full":
+        if dense:
+            raise ValueError(
+                "exec_mode='full' only supports op-id plans: the dense "
+                "identity-padded (L, W, W) operator stack was removed in "
+                "favour of event-sparse execution")
+        scan_slots = make_timeline_step_fn(loss_fn, network, cfg,
+                                           gate_mode=plan.gate_mode)
+    elif exec_mode == "event":
+        executor = EventExecutor(loss_fn, network, cfg,
+                                 gate_mode=plan.gate_mode)
+    else:
+        raise ValueError(f"unknown exec_mode {exec_mode!r}; "
+                         f"expected 'event' or 'full'")
     eval_loss = jax.jit(loss_fn)
     eval_acc = jax.jit(accuracy_fn)
 
@@ -561,9 +766,12 @@ def run_timeline(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
     done = 0
     while done < slots:
         chunk = min(cfg.eval_every, slots - done)
-        ops = _chunk_ops(plan, done, done + chunk, n, dense=dense)
-        active = jnp.asarray(plan.active[done:done + chunk])
-        carry = scan_slots(carry, worker_data, ops, active)
+        if exec_mode == "full":
+            ops = jnp.asarray(plan.op_ids[done:done + chunk])
+            active = jnp.asarray(plan.active[done:done + chunk])
+            carry = scan_slots(carry, worker_data, ops, active)
+        else:
+            carry = executor.run(carry, worker_data, plan, done, done + chunk)
         done += chunk
         u = weighted_average(carry[0], a)
         rec_slots.append(done)

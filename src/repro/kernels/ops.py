@@ -17,7 +17,9 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as ref_mod
 from repro.kernels.flash_attention import flash_attention_fwd
-from repro.kernels.hier_mix import hier_mix_chunks, hier_mix_tree
+from repro.kernels.hier_mix import (  # noqa: F401  (re-exported operators)
+    GroupedOperator, hier_mix_chunks, hier_mix_packed as _hier_mix_packed,
+    hier_mix_tree, make_grouped_operator)
 from repro.kernels.slstm_scan import slstm_scan as _slstm_scan_kernel
 
 
@@ -57,9 +59,20 @@ def hier_mix(x, g, t_op, theta, eta: float, *, block_c: int = 512):
 
 def hier_mix_pytree(stacked_params, stacked_grads, t_op, theta, eta: float, *,
                     block_c: int = 512):
-    """Fused gated-SGD + averaging over a whole stacked parameter pytree."""
+    """Fused gated-SGD + averaging over a whole stacked parameter pytree,
+    one `pallas_call` PER LEAF (legacy launch loop — `hier_mix_packed` is
+    the single-launch fast path)."""
     return hier_mix_tree(stacked_params, stacked_grads, t_op, theta, eta,
                          block_c=block_c, interpret=_interpret_default())
+
+
+def hier_mix_packed(stacked_params, stacked_grads, op, theta, eta: float, *,
+                    block_c: int = 512):
+    """Fused gated-SGD + averaging over a whole stacked pytree in ONE kernel
+    launch over the packed (W, sum C_i) buffer.  ``op`` is a dense (W, W)
+    operator or a `GroupedOperator` (fused two_stage / circulant mixing)."""
+    return _hier_mix_packed(stacked_params, stacked_grads, op, theta, eta,
+                            block_c=block_c, interpret=_interpret_default())
 
 
 # ------------------------------------------------------------- slstm scan

@@ -1,0 +1,229 @@
+"""Packing contract (`repro.core.packing`) + packed single-launch hier_mix:
+pack/unpack round-trips, packed-vs-per-leaf bit-equality, flat XLA fast
+paths, structured (two_stage / circulant) kernel fusion, and the
+one-lowering-per-(W, treedef) compile-count guarantee."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packing, protocol
+from repro.core.hierarchy import MultiLevelNetwork
+from repro.kernels import hier_mix as hm
+from repro.kernels.hier_mix import (hier_mix_packed, hier_mix_tree,
+                                    make_grouped_operator)
+
+W = 20
+
+
+def _tree(key, w=W, awkward=True, bf16=True, scalar=True):
+    """Random stacked pytree exercising the awkward cases: a scalar (W,)
+    leaf, a bf16 leaf, a non-tile-aligned (W, 20, 37) leaf."""
+    ks = jax.random.split(key, 5)
+    tree = {"w1": jax.random.normal(ks[0], (w, 20, 37) if awkward
+                                    else (w, 16, 128)),
+            "small": jax.random.normal(ks[1], (w, 5))}
+    if scalar:
+        tree["b"] = jax.random.normal(ks[2], (w,))
+    if bf16:
+        tree["h"] = jax.random.normal(ks[3], (w, 33, 8)).astype(jnp.bfloat16)
+    return tree
+
+
+def _rand_like(tree, key):
+    return jax.tree.map(
+        lambda x: jax.random.normal(key, x.shape).astype(x.dtype), tree)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("kwargs", [
+    dict(), dict(awkward=False), dict(bf16=False, scalar=False)])
+def test_pack_unpack_round_trip(seed, kwargs):
+    tree = _tree(jax.random.PRNGKey(seed), **kwargs)
+    spec = packing.pack_spec(tree)
+    buf = packing.pack(tree, spec)
+    leaves = jax.tree.leaves(tree)
+    assert buf.shape == (W, sum(int(np.prod(x.shape[1:])) for x in leaves))
+    assert buf.dtype == jnp.float32
+    back = packing.unpack(buf, spec)
+    for a, b in zip(leaves, jax.tree.leaves(back)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    # the spec is cached per (treedef, shapes/dtypes)
+    assert packing.pack_spec(tree) is spec
+
+
+def test_pack_spec_rejects_empty_and_mismatched_worker_axes():
+    with pytest.raises(ValueError, match="empty"):
+        packing.pack_spec({})
+    with pytest.raises(ValueError, match="worker axis"):
+        packing.pack_spec({"a": jnp.zeros((4, 3)), "b": jnp.zeros((5, 3))})
+    with pytest.raises(ValueError, match="worker axis"):
+        packing.pack_spec({"a": jnp.zeros(()), "b": jnp.zeros((4, 3))})
+
+
+@pytest.mark.parametrize("seed", [0, 1, 7])
+def test_packed_vs_per_leaf_bit_equality(seed):
+    """ONE packed launch must reproduce the per-leaf launch loop bit for
+    bit — f32 accumulation and a single rounding to the leaf dtype on both
+    paths, zero padding contributing nothing."""
+    key = jax.random.PRNGKey(seed)
+    tree = _tree(key)
+    grads = _rand_like(tree, jax.random.fold_in(key, 1))
+    t_op = jax.nn.softmax(
+        jax.random.normal(jax.random.fold_in(key, 2), (W, W)), axis=0)
+    theta = (jax.random.uniform(jax.random.fold_in(key, 3), (W,)) > 0.4
+             ).astype(jnp.float32)
+    packed = hier_mix_packed(tree, grads, t_op, theta, 0.1, interpret=True)
+    perleaf = hier_mix_tree(tree, grads, t_op, theta, 0.1, interpret=True)
+    for a, b in zip(jax.tree.leaves(packed), jax.tree.leaves(perleaf)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_flat_xla_paths_match_per_leaf():
+    key = jax.random.PRNGKey(4)
+    tree = _tree(key, bf16=False)              # all-f32: fast path engaged
+    assert packing.all_f32(tree)
+    t_op = jax.nn.softmax(
+        jax.random.normal(jax.random.fold_in(key, 1), (W, W)), axis=0)
+    got = packing.apply_operator_packed(tree, t_op)
+    want = jax.tree.map(lambda x: jnp.einsum("ij,i...->j...", t_op, x), tree)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6, rtol=1e-6)
+    # identity operator is an exact pass-through
+    eye = packing.apply_operator_packed(tree, jnp.eye(W))
+    for a, b in zip(jax.tree.leaves(eye), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    a_vec = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 2),
+                                             (W,)))
+    got_u = packing.weighted_average_packed(tree, a_vec)
+    want_u = jax.tree.map(lambda x: jnp.tensordot(a_vec, x, axes=1), tree)
+    for a, b in zip(jax.tree.leaves(got_u), jax.tree.leaves(want_u)):
+        assert a.shape == b.shape
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6, rtol=1e-6)
+
+
+def test_flat_path_gate_and_forced_end_to_end():
+    """The flat paths auto-gate per backend (off on CPU, where copies cost
+    more than dispatches); force-enabled they must agree with the per-leaf
+    implementations through the public simulator entry points."""
+    from repro.core.simulator import apply_operator, weighted_average
+    assert not packing.flat_paths_enabled()        # CPU test environment
+    key = jax.random.PRNGKey(8)
+    tree = _tree(key, bf16=False)
+    t_op = jax.nn.softmax(
+        jax.random.normal(jax.random.fold_in(key, 1), (W, W)), axis=0)
+    a_vec = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 2),
+                                             (W,)))
+    per_leaf_t = apply_operator(tree, t_op)
+    per_leaf_u = weighted_average(tree, a_vec)
+    packing.set_flat_paths(True)
+    try:
+        assert packing.flat_paths_enabled()
+        flat_t = apply_operator(tree, t_op)
+        flat_u = weighted_average(tree, a_vec)
+    finally:
+        packing.set_flat_paths(None)
+    for a, b in zip(jax.tree.leaves(per_leaf_t), jax.tree.leaves(flat_t)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6, rtol=1e-6)
+    for a, b in zip(jax.tree.leaves(per_leaf_u), jax.tree.leaves(flat_u)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6, rtol=1e-6)
+
+
+def test_grouped_operator_matches_two_stage_strategies():
+    """The fused structured kernel (skinny scatter/broadcast matmuls +
+    small hub mix) reproduces the XLA two_stage strategy math."""
+    net = MultiLevelNetwork.build("ring", [5, 5, 5, 5], seed=0)
+    st = protocol.state_from_network(net)
+    key = jax.random.PRNGKey(5)
+    tree = _tree(key, bf16=False)
+    grads = _rand_like(tree, jax.random.fold_in(key, 1))
+    theta = (jax.random.uniform(jax.random.fold_in(key, 2), (W,)) > 0.3
+             ).astype(jnp.float32)
+    upd = protocol.gated_sgd_update(tree, grads, theta, 0.1)
+    cases = [
+        (make_grouped_operator(net.subnet_of, net.v),
+         protocol.subnet_average_two_stage(upd, st)),
+        (make_grouped_operator(net.subnet_of, net.v, h=net.hub_net.h),
+         protocol.hub_average_two_stage(upd, st)),
+    ]
+    for op, want in cases:
+        got = hier_mix_packed(tree, grads, op, theta, 0.1, interpret=True)
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=2e-5, rtol=2e-5)
+
+
+def test_single_pallas_lowering_per_treedef(monkeypatch):
+    """The packed path lowers ONE `pallas_call` per (W, treedef) no matter
+    how many leaves / distinct leaf shapes the tree has (the per-leaf loop
+    lowered once per leaf), and jit caching keeps repeat rounds at zero new
+    lowerings."""
+    calls = {"n": 0}
+    orig = hm.pl.pallas_call
+
+    def counting(*args, **kwargs):
+        calls["n"] += 1
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(hm.pl, "pallas_call", counting)
+    key = jax.random.PRNGKey(6)
+    tree = _tree(key)                        # 4 leaves, 4 distinct shapes
+    grads = _rand_like(tree, jax.random.fold_in(key, 1))
+    t_op = jnp.eye(W)
+    theta = jnp.ones((W,))
+    f = jax.jit(lambda s, g: hier_mix_packed(s, g, t_op, theta, 0.1,
+                                             interpret=True))
+    jax.block_until_ready(f(tree, grads))
+    assert calls["n"] == 1                   # one lowering for the tree
+    jax.block_until_ready(f(tree, grads))
+    assert calls["n"] == 1                   # cached: no re-lowering
+    # the per-leaf loop pays one lowering per leaf for the same tree
+    g = jax.jit(lambda s, gg: hier_mix_tree(s, gg, t_op, theta, 0.1,
+                                            interpret=True))
+    jax.block_until_ready(g(tree, grads))
+    assert calls["n"] == 1 + len(jax.tree.leaves(tree))
+
+
+def test_single_lowering_across_simulated_round(monkeypatch):
+    """A full simulated round through the event-sparse pallas path compiles
+    one packed lowering per EVENT KIND (subnet V, hub Z) — not per leaf —
+    and a second identical round adds none."""
+    from repro.core import baselines
+    from repro.core.hierarchy import MLLSchedule
+    from repro.core.simulator import SimConfig, init_sim_carry, replicate
+    from repro.core.timeline import EventExecutor, get_policy
+
+    calls = {"n": 0}
+    orig = hm.pl.pallas_call
+
+    def counting(*args, **kwargs):
+        calls["n"] += 1
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(hm.pl, "pallas_call", counting)
+    net, _ = baselines.mll_sgd("complete", [4, 4], tau=2, q=2)
+    sched = MLLSchedule(tau=2, q=2)
+    plan = get_policy("deadline").plan(net, sched, 8,
+                                      np.random.default_rng(0))
+    init = {"w": jnp.zeros((6, 3)), "b": jnp.zeros((3,)),
+            "v": jnp.zeros((2, 5))}
+
+    def loss_fn(p, batch):
+        del batch
+        return sum(jnp.sum(x * x) for x in jax.tree.leaves(p))
+
+    cfg = SimConfig(eta=0.1, batch_size=2, kernel="pallas")
+    ex = EventExecutor(loss_fn, net, cfg, gate_mode=plan.gate_mode)
+    data = {"x": jnp.zeros((8, 4, 1))}
+    carry = init_sim_carry(replicate(init, 8), cfg, seed=0)
+    carry = ex.run(carry, data, plan, 0, 8)   # full round: V, V, Z events
+    assert calls["n"] == 2                    # one lowering per event kind
+    ex.run(carry, data, plan, 0, 8)
+    assert calls["n"] == 2                    # second round: all cached

@@ -52,13 +52,13 @@ def _run_both(net, sched, policy, *, slots=48, seed=0, cfg=None,
 
 
 def _run_tl(net, sched, policy, *, slots=48, seed=0, cfg=None,
-            policy_rng=None, rate_model="bernoulli"):
+            policy_rng=None, rate_model="bernoulli", **kw):
     cfg = cfg or SimConfig(eta=0.1, batch_size=8)
     data, loss_fn, acc_fn, init = _task(net.num_workers, seed=seed)
     return run_timeline(loss_fn, acc_fn, init, data.worker_data(), data.full,
                         data.test, net, sched, slots=slots, policy=policy,
                         cfg=cfg, seed=seed, policy_rng=policy_rng,
-                        rate_model=rate_model)
+                        rate_model=rate_model, **kw)
 
 
 # -------------------------------------------------------------------- registry
@@ -289,6 +289,149 @@ def test_truncated_budget_drops_unfinished_round():
     assert plan.slots_used <= 20
     assert all(e.slot <= 20 for e in plan.events)
     assert len(plan.events) == plan.rounds_completed
+
+
+# ------------------------------------------- event-sparse execution
+@pytest.mark.parametrize("kernel", ["xla", "pallas"])
+@pytest.mark.parametrize("policy", ["barrier", "deadline"])
+def test_event_sparse_matches_full_scan_bit_for_bit(kernel, policy):
+    """The event-sparse executor (local slots pay only the gated update —
+    no lax.switch, no identity contraction) must replay the full every-slot
+    scan bit for bit: same PRNG stream, same per-slot math."""
+    rates = [1.0, 0.9, 0.8, 0.5, 0.7, 1.0, 0.6, 0.9]
+    net, _ = baselines.mll_sgd("ring", [4, 4], tau=4, q=2,
+                               worker_rates=rates)
+    cfg = SimConfig(eta=0.1, batch_size=8, kernel=kernel)
+    sched = MLLSchedule(tau=4, q=2)
+    data, loss_fn, acc_fn, init = _task(8, seed=1)
+    runs = {}
+    for mode in ("full", "event"):
+        runs[mode] = run_timeline(
+            loss_fn, acc_fn, init, data.worker_data(), data.full, data.test,
+            net, sched, slots=32, policy=policy, cfg=cfg, seed=2,
+            policy_rng=np.random.default_rng(11), exec_mode=mode)
+    for a, b in zip(jax.tree.leaves(runs["full"].final_avg_params),
+                    jax.tree.leaves(runs["event"].final_avg_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(runs["full"].train_loss,
+                                  runs["event"].train_loss)
+    np.testing.assert_array_equal(runs["full"].test_acc,
+                                  runs["event"].test_acc)
+
+
+def test_event_sparse_matches_legacy_dense_full_scan_gossip():
+    """For per-slot dense-operator plans (gossip) the legacy executor
+    materialized an (L, W, W) identity-padded stack and contracted every
+    slot; frozen here as the reference, the event-sparse path must match it
+    bit for bit while touching only the event slots."""
+    from repro.core import protocol
+    from repro.core.simulator import (apply_operator, init_sim_carry,
+                                      replicate, weighted_average)
+
+    rates = [0.95] * 4 + [0.55] * 4
+    net, _ = baselines.mll_sgd("complete", [4, 4], tau=3, q=2,
+                               worker_rates=rates)
+    sched = MLLSchedule(tau=3, q=2)
+    cfg = SimConfig(eta=0.1, batch_size=8)
+    data, loss_fn, acc_fn, init = _task(8, seed=3)
+    slots = 36
+    res = run_timeline(loss_fn, acc_fn, init, data.worker_data(), data.full,
+                       data.test, net, sched, slots=slots, policy="gossip",
+                       cfg=cfg, seed=5, policy_rng=np.random.default_rng(9))
+    plan = res.plan
+    assert plan.op_mats, "gossip plan fired no dense events"
+
+    # frozen legacy executor: per-slot (W, W) operators, identity-padded
+    n = net.num_workers
+    p_rates = jnp.asarray(net.worker_rates, jnp.float32)
+    optimizer = protocol.resolve_inner_optimizer(cfg)
+    grad_fn = jax.grad(loss_fn)
+    worker_data = data.worker_data()
+
+    @jax.jit
+    def legacy_scan(carry, ops, active):
+        def body(carry, xs):
+            op, act = xs
+            stacked, opt_state, mix_state, key = carry
+            key, kb, kg = jax.random.split(key, 3)
+            wkeys = jax.random.split(kb, n)
+
+            def worker_grad(wp, wd, wk):
+                nsamp = jax.tree.leaves(wd)[0].shape[0]
+                idx = jax.random.randint(wk, (cfg.batch_size,), 0, nsamp)
+                return grad_fn(wp, jax.tree.map(lambda x: x[idx], wd))
+
+            grads = jax.vmap(worker_grad)(stacked, worker_data, wkeys)
+            jax.random.uniform(kg, (n,))        # forced gate: draw consumed
+            stacked, opt_state = protocol.gated_inner_update(
+                optimizer, stacked, opt_state, grads, act)
+            stacked = apply_operator(stacked, op)
+            return (stacked, opt_state, mix_state, key), None
+
+        carry, _ = jax.lax.scan(body, carry, (ops, active))
+        return carry
+
+    eye = np.eye(n, dtype=np.float32)
+    mats = np.stack([plan.op_mats.get(s, eye) for s in range(slots)])
+    carry = init_sim_carry(replicate(init, n), cfg, seed=5)
+    carry = legacy_scan(carry, jnp.asarray(mats), jnp.asarray(plan.active))
+    want = weighted_average(carry[0], jnp.asarray(net.a, jnp.float32))
+    for a, b in zip(jax.tree.leaves(want),
+                    jax.tree.leaves(res.final_avg_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_dense_event_step_preserves_leaf_dtypes():
+    """The per-event dense mix must keep non-f32 leaves in their own dtype
+    (the legacy per-slot path cast the operator to the leaf dtype; an f32
+    einsum would silently promote bf16 params and retrace the local scan)."""
+    from repro.core.simulator import init_sim_carry, replicate
+    from repro.core.timeline import EventExecutor
+
+    net, _ = baselines.mll_sgd("complete", [2, 2], tau=2, q=1)
+    cfg = SimConfig(eta=0.1, batch_size=2)
+
+    def loss_fn(p, batch):
+        del batch
+        return sum(jnp.sum(x.astype(jnp.float32) ** 2)
+                   for x in jax.tree.leaves(p))
+
+    ex = EventExecutor(loss_fn, net, cfg, gate_mode="forced")
+    init = {"w": jnp.ones((3, 2), jnp.bfloat16), "b": jnp.ones((4,))}
+    carry = init_sim_carry(replicate(init, 4), cfg, seed=0)
+    data = {"x": jnp.zeros((4, 2, 1))}
+    t = jnp.asarray(np.eye(4, dtype=np.float32))
+    out = ex.step_dense(carry, data, jnp.ones((4,), jnp.float32), t)
+    for a, b in zip(jax.tree.leaves(carry[0]), jax.tree.leaves(out[0])):
+        assert a.dtype == b.dtype
+
+
+def test_full_exec_mode_rejected_for_dense_plans():
+    net, _ = baselines.mll_sgd("complete", [4, 4], tau=4, q=2)
+    with pytest.raises(ValueError, match="exec_mode='full'"):
+        _run_tl(net, MLLSchedule(tau=4, q=2), "gossip", slots=16,
+                policy_rng=np.random.default_rng(0), exec_mode="full")
+    with pytest.raises(ValueError, match="unknown exec_mode"):
+        _run_tl(net, MLLSchedule(tau=4, q=2), "barrier", slots=16,
+                exec_mode="warp")
+
+
+@pytest.mark.parametrize("mixing", ["two_stage", "ppermute"])
+def test_pallas_structured_mixing_through_timeline(mixing):
+    """kernel='pallas' composes with the structured strategies via the
+    fused GroupedOperator kernels (event-sparse executor only)."""
+    net, _ = baselines.mll_sgd("ring", [4, 4], tau=4, q=2)
+    sched = MLLSchedule(tau=4, q=2)
+    data, loss_fn, acc_fn, init = _task(8)
+    outs = {}
+    for kernel in ("xla", "pallas"):
+        cfg = SimConfig(eta=0.1, batch_size=8, kernel=kernel, mixing=mixing)
+        outs[kernel] = run_timeline(
+            loss_fn, acc_fn, init, data.worker_data(), data.full, data.test,
+            net, sched, slots=16, policy="deadline", cfg=cfg, seed=1)
+    for a, b in zip(jax.tree.leaves(outs["xla"].final_avg_params),
+                    jax.tree.leaves(outs["pallas"].final_avg_params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
 
 
 def test_plan_shapes_and_event_trace():
