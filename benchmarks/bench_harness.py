@@ -1,0 +1,95 @@
+"""Production-harness throughput: slots/sec of the plan-driven launch path.
+
+The launch path now runs through the timeline engine (`launch.harness`):
+readiness-policy plans compiled into event-sparse jitted scans over the
+per-worker transformer step.  This benchmark measures what a production
+slot costs per policy on the smoke transformer config — STEADY-STATE: one
+`TrainHarness` is compiled, a full warmup pass populates every jit
+signature the plan can hit (all pow2 chunk lengths, every event kind), and
+a second pass over a fresh carry is timed.  The plan's protocol accounting
+(rounds, events, idle worker-slots) is emitted from the shared trace
+schema — the same document the simulator and the launcher export.
+
+Emits ``harness/...`` CSV lines and writes BENCH_harness.json at the repo
+root (the nightly job uploads it; `common.load_bench_json` is the baseline
+a future regression gate can diff against).
+
+  PYTHONPATH=src python -m benchmarks.bench_harness [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.configs.registry import get_smoke_config
+from repro.core import timeline
+from repro.core.mllsgd import MLLConfig, build_network, build_state
+from repro.core.protocol import init_train_state
+from repro.data.pipeline import LMBatcher, make_token_stream
+from repro.launch.harness import TrainHarness
+from repro.launch.train import replicate_params
+from repro.models import model as model_mod
+
+POLICIES = ("deadline", "barrier", "gossip")
+RATES = (1.0, 0.9, 1.0, 0.6)
+
+
+def bench_policy(cfg, policy: str, slots: int, *, seq_len: int,
+                 batch: int) -> None:
+    mll = MLLConfig(tau=4, q=2, eta=0.05, hub_topology="complete",
+                    worker_rates=RATES)
+    network = build_network(
+        dataclasses.replace(mll, granularity="worker_per_data"), 2, 2)
+    st = build_state(mll, network)
+    plan = timeline.get_policy(policy).plan(
+        network, mll.schedule, slots, np.random.default_rng(0))
+    params = model_mod.init_model(jax.random.PRNGKey(0), cfg)
+    stacked = replicate_params(params, network.num_workers)
+    stream = make_token_stream(network.num_workers, 8192,
+                               vocab_size=cfg.vocab_size, seed=0)
+    batcher = LMBatcher(stream, seq_len, batch)
+    harness = TrainHarness(cfg, mll, st, gate_mode=plan.gate_mode)
+
+    def full_pass():
+        state = init_train_state(stacked, cfg=mll)
+        rng = np.random.default_rng(0)
+        return harness.run_span(state, plan, batcher, rng, 0, plan.slots)
+
+    jax.block_until_ready(full_pass()[0].params)   # compile every signature
+    t0 = time.time()
+    state, _ = full_pass()             # steady state, same jit caches
+    jax.block_until_ready(state.params)
+    dt = time.time() - t0
+
+    doc = timeline.plan_trace(plan, policy=policy, source="bench_harness")
+    common.emit(f"harness/slots_per_sec_{policy}", slots / dt, t0=t0)
+    common.emit(f"harness/rounds_{policy}", int(doc["rounds_completed"]))
+    common.emit(f"harness/events_{policy}", len(doc["events"]))
+    common.emit(f"harness/idle_worker_slots_{policy}",
+                int(np.sum(doc["idle_slots"])))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny slot budget (CI-sized)")
+    ap.add_argument("--slots", type=int, default=None)
+    args = ap.parse_args(argv)
+    slots = args.slots or (16 if args.smoke else 64)
+    seq_len, batch = (32, 2) if args.smoke else (64, 4)
+    cfg = get_smoke_config("qwen2-0.5b")
+
+    common.begin_bench("harness")
+    for policy in POLICIES:
+        bench_policy(cfg, policy, slots, seq_len=seq_len, batch=batch)
+    common.end_bench("harness")
+    common.write_bench_json("harness", common.bench_records("harness"))
+
+
+if __name__ == "__main__":
+    main()

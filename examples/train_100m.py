@@ -1,18 +1,22 @@
 """End-to-end driver: train a ~100M-parameter transformer with production
-MLL-SGD (vmapped per-worker grads, Bernoulli gating, V/Z averaging) for a
-few hundred steps on synthetic LM data.
+MLL-SGD through the plan-driven harness (vmapped per-worker grads,
+Bernoulli gating, V/Z averaging on the timeline engine's slot clock).
 
 This is the deliverable-(b) end-to-end example.  On the CPU container the
 default runs a ~25M slice for wall-clock sanity; pass --full-100m for the
-real ~100M config (slower, same code path).
+real ~100M config (slower, same code path).  --policy picks any registered
+readiness policy (deadline = the paper's MLL-SGD timing; barrier = Local
+SGD straggler semantics; gossip = overlapping subnet rounds).
 
   PYTHONPATH=src python examples/train_100m.py [--steps 200] [--full-100m]
+      [--policy deadline|barrier|gossip]
 """
 import argparse
 import dataclasses
 
 from repro.configs.registry import get_config
 from repro.core.mllsgd import MLLConfig
+from repro.core.timeline import available_policies
 from repro.launch.train import TrainLoopConfig, run_training
 
 
@@ -33,23 +37,31 @@ def build_config(full_100m: bool):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=192)
+    ap.add_argument("--steps", type=int, default=192,
+                    help="slot budget on the timeline clock")
     ap.add_argument("--full-100m", action="store_true")
     ap.add_argument("--tau", type=int, default=8)
     ap.add_argument("--q", type=int, default=4)
+    ap.add_argument("--policy", default="deadline",
+                    choices=available_policies())
     args = ap.parse_args()
 
     cfg = build_config(args.full_100m)
+    # gossip mixes strict worker subsets -> dense operators only
+    mixing = "dense" if args.policy == "gossip" else "two_stage"
     mll = MLLConfig(tau=args.tau, q=args.q, eta=0.3, hub_topology="ring",
-                    worker_rates=(1.0, 0.8, 1.0, 0.6), mixing="two_stage")
+                    worker_rates=(1.0, 0.8, 1.0, 0.6), mixing=mixing)
     loop = TrainLoopConfig(steps=args.steps, eval_every=args.tau * args.q,
                            seq_len=128, batch_per_worker=4,
-                           tokens_per_worker=1 << 16)
+                           tokens_per_worker=1 << 16, policy=args.policy)
     out = run_training(cfg, mll, loop, num_subnets=2, workers_per_subnet=2)
     hist = out["history"]
+    plan = out["plan"]
     drop = hist["avg_loss"][0] - hist["avg_loss"][-1]
     print(f"u_k loss: {hist['avg_loss'][0]:.3f} -> {hist['avg_loss'][-1]:.3f} "
-          f"(drop {drop:.3f}) over {args.steps} MLL-SGD ticks")
+          f"(drop {drop:.3f}) over {args.steps} slots "
+          f"({plan.rounds_completed} {args.policy} rounds, "
+          f"{int(plan.idle_slots.sum())} idle worker-slots)")
     assert drop > 0, "training must reduce the averaged model's loss"
 
 

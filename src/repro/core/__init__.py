@@ -13,7 +13,9 @@ from repro.core.timeline import (ReadinessPolicy, POLICY_REGISTRY,
                                  register_policy, get_policy,
                                  available_policies, TimelineEvent,
                                  TimelinePlan, TimelineResult, run_timeline,
-                                 make_timeline_step_fn)
+                                 make_timeline_step_fn, RateCalibration,
+                                 network_with_rates, plan_trace,
+                                 export_trace, load_trace)
 from repro.core.mllsgd import (MLLConfig, MLLState, build_network, build_state,
                                mll_train_step, apply_schedule,
                                apply_schedule_with_state, phase_of,
@@ -35,7 +37,8 @@ __all__ = [
     "apply_operator", "barrier_round_slots", "mll_round_slots",
     "ReadinessPolicy", "POLICY_REGISTRY", "register_policy", "get_policy",
     "available_policies", "TimelineEvent", "TimelinePlan", "TimelineResult",
-    "run_timeline", "make_timeline_step_fn",
+    "run_timeline", "make_timeline_step_fn", "RateCalibration",
+    "network_with_rates", "plan_trace", "export_trace", "load_trace",
     "MLLConfig", "MLLState", "build_network", "build_state", "mll_train_step",
     "apply_schedule", "apply_schedule_with_state", "phase_of", "gate_sample",
     "gated_sgd_update", "hub_average_ppermute", "hub_average_int8",

@@ -78,7 +78,7 @@ from repro.core.simulator import SimConfig, _check_kernel, apply_operator, \
 
 PyTree = Any
 
-RATE_MODELS = ("bernoulli", "deterministic")
+RATE_MODELS = ("bernoulli", "deterministic", "measured")
 
 
 # ------------------------------------------------------------ slot accounting
@@ -104,10 +104,75 @@ def mll_round_slots(tau: int, rounds: int) -> np.ndarray:
 
 def _round_trials(rng: np.random.Generator | None, rates: np.ndarray,
                   tau: int, rate_model: str) -> np.ndarray:
-    """Per-worker slots needed for tau gradient steps under the rate model."""
-    if rate_model == "deterministic":
+    """Per-worker slots needed for tau gradient steps under the rate model.
+
+    ``"measured"`` is the ``"deterministic"`` staircase with rates that came
+    from a profiled `RateCalibration` instead of hand-fed p_i — the draw-free
+    1/p_i spacing is exactly what a measured seconds-per-step ratio means.
+    """
+    if rate_model in ("deterministic", "measured"):
         return np.ceil(tau / np.asarray(rates)).astype(np.int64)
     return rng.negative_binomial(tau, rates) + tau
+
+
+# --------------------------------------------------- measured rate calibration
+@dataclasses.dataclass(frozen=True)
+class RateCalibration:
+    """Per-worker rates measured from profiled step times, not hand-fed p_i.
+
+    ``step_times[i]`` is worker i's measured seconds per local gradient step
+    (warmup timing pass; see `launch.harness.measure_worker_rates`).  The
+    induced rate is relative to the fastest worker: p_i = min_j t_j / t_i,
+    so the fastest worker advances every slot and a 2x-slower worker every
+    other slot — the ``"measured"`` rate model's deterministic staircase.
+    """
+    step_times: tuple[float, ...]
+
+    def __post_init__(self):
+        if not self.step_times or any(t <= 0 for t in self.step_times):
+            raise ValueError("calibration needs one positive step time per "
+                             f"worker, got {self.step_times!r}")
+
+    @property
+    def rates(self) -> np.ndarray:
+        t = np.asarray(self.step_times, np.float64)
+        return t.min() / t
+
+    def to_json(self) -> dict:
+        return {"schema": "mll-rate-calibration/v1",
+                "step_times": [float(t) for t in self.step_times],
+                "rates": [float(r) for r in self.rates]}
+
+    @staticmethod
+    def from_json(d: dict) -> "RateCalibration":
+        return RateCalibration(step_times=tuple(float(t)
+                                                for t in d["step_times"]))
+
+    def save(self, path: str) -> str:
+        import json
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=2)
+        return path
+
+    @staticmethod
+    def load(path: str) -> "RateCalibration":
+        import json
+        with open(path) as f:
+            return RateCalibration.from_json(json.load(f))
+
+
+def network_with_rates(network: MultiLevelNetwork,
+                       rates: np.ndarray) -> MultiLevelNetwork:
+    """The same network with worker_rates replaced (e.g. by a
+    `RateCalibration`'s measured rates); validation re-runs via build-time
+    invariants on the replaced field."""
+    rates = np.asarray(rates, np.float64)
+    if rates.shape != (network.num_workers,):
+        raise ValueError(f"need {network.num_workers} rates, got {rates.shape}")
+    if not np.all((rates > 0) & (rates <= 1.0)):
+        raise ValueError("measured rates must land in (0, 1] — normalize "
+                         "step times against the fastest worker")
+    return dataclasses.replace(network, worker_rates=rates)
 
 
 # ------------------------------------------------------------- plan structures
@@ -277,7 +342,7 @@ class FixedDeadlinePolicy(ReadinessPolicy):
         n = network.num_workers
         tau, q = schedule.tau, schedule.q
         all_subnets = tuple(range(network.num_subnets))
-        if rate_model == "deterministic":
+        if rate_model in ("deterministic", "measured"):
             # worker i steps on slots where floor((s+1) p) > floor(s p)
             s = np.arange(slots + 1)[:, None]
             p = np.asarray(network.worker_rates)[None, :]
@@ -439,6 +504,19 @@ class NeighborReadyGossipPolicy(ReadinessPolicy):
 
 
 # ---------------------------------------------------------------- execution
+def apply_event_operator(stacked: PyTree, op: jnp.ndarray) -> PyTree:
+    """Per-event dense (W, W) operator with the engine's dtype semantics:
+    all-f32 trees take `apply_operator` (flat packed path where gated);
+    mixed-dtype trees mix each leaf in its OWN dtype — an f32 einsum would
+    silently promote bf16 params (legacy dense-path semantics).  The single
+    implementation both event executors share (`EventExecutor._mix_event`
+    and the production `train_step.mll_harness_step`)."""
+    if packing.all_f32(stacked):
+        return apply_operator(stacked, op)
+    return jax.tree.map(
+        lambda x: jnp.einsum("ij,i...->j...", op.astype(x.dtype), x), stacked)
+
+
 def _pallas_opt_state(opt_state, theta):
     """Engine-owned bookkeeping for the kernel path: the fused kernel owns
     the parameter update, but the per-worker step counts advance exactly as
@@ -630,14 +708,7 @@ class EventExecutor:
         stacked, opt_state = protocol.gated_inner_update(
             self.optimizer, stacked, opt_state, grads, theta)
         if isinstance(op, jnp.ndarray) or hasattr(op, "shape"):
-            if packing.all_f32(stacked):
-                stacked = apply_operator(stacked, op)
-            else:
-                # legacy dense-path dtype semantics: mix in the leaf dtype
-                # (einsum with an f32 operator would promote bf16 leaves)
-                stacked = jax.tree.map(
-                    lambda x: jnp.einsum("ij,i...->j...",
-                                         op.astype(x.dtype), x), stacked)
+            stacked = apply_event_operator(stacked, op)
         elif op == protocol.PHASE_SUBNET:
             stacked, mix_state = self.strategy.subnet_with_state(
                 stacked, self.st, mix_state)
@@ -689,6 +760,55 @@ class EventExecutor:
                         carry, data, act)
             s = e + 1
         return carry
+
+
+# ------------------------------------------------------------- event traces
+TRACE_SCHEMA = "mll-timeline-trace/v1"
+
+
+def plan_trace(plan: TimelinePlan, **meta: Any) -> dict:
+    """The canonical event-trace document for a `TimelinePlan`.
+
+    One schema for every engine consumer: the simulator's `run_timeline`
+    plans and the production harness (`launch.harness`) emit identical
+    documents, so `benchmarks/` and the nightly gate read either without
+    caring which executor produced it.  ``meta`` (policy, rate_model,
+    calibration, ...) is merged under ``"meta"``.
+    """
+    return {
+        "schema": TRACE_SCHEMA,
+        "slots": int(plan.slots),
+        "slots_used": int(plan.slots_used),
+        "rounds_completed": int(plan.rounds_completed),
+        "gate_mode": plan.gate_mode,
+        "busy_slots": [int(b) for b in plan.busy_slots],
+        "idle_slots": [int(i) for i in plan.idle_slots],
+        "round_costs": [int(c) for c in plan.round_costs],
+        "events": [{"slot": int(e.slot), "kind": e.kind,
+                    "participants": [int(p) for p in e.participants],
+                    "round_index": int(e.round_index)}
+                   for e in plan.events],
+        "meta": meta,
+    }
+
+
+def export_trace(path: str, plan: TimelinePlan, **meta: Any) -> str:
+    """Write `plan_trace` as JSON; returns the path."""
+    import json
+    with open(path, "w") as f:
+        json.dump(plan_trace(plan, **meta), f, indent=2)
+    return path
+
+
+def load_trace(path: str) -> dict:
+    """Read a trace document back, validating the schema tag."""
+    import json
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != TRACE_SCHEMA:
+        raise ValueError(f"{path}: not a {TRACE_SCHEMA} document "
+                         f"(schema={doc.get('schema')!r})")
+    return doc
 
 
 @dataclasses.dataclass

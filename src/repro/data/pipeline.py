@@ -97,7 +97,14 @@ def make_token_stream(num_workers: int, tokens_per_worker: int, *,
 
 @dataclasses.dataclass
 class LMBatcher:
-    """Per-worker LM batches: inputs (W, B, S) and next-token labels."""
+    """Per-worker LM batches: inputs (W, B, S) and next-token labels.
+
+    The batcher itself is stateless; the DATA CURSOR of a run is the numpy
+    Generator that drives `sample`.  `rng_state`/`rng_from_state` serialize
+    that cursor (JSON-able) so a resumed run replays the exact batch
+    sequence, and `skip` fast-forwards it without materialising batches
+    (idle timeline slots still consume their slot's draw).
+    """
     stream: np.ndarray           # (W, T)
     seq_len: int
     batch_size: int              # per worker
@@ -112,3 +119,23 @@ class LMBatcher:
         seqs = seqs.reshape(w, self.batch_size, self.seq_len + 1)
         return {"tokens": jnp.asarray(seqs[..., :-1]),
                 "labels": jnp.asarray(seqs[..., 1:])}
+
+    def skip(self, rng: np.random.Generator, n: int) -> None:
+        """Advance the data cursor exactly as `sample` called ``n`` times
+        would, without building the batches (all-idle slot fast-forward)."""
+        w, t = self.stream.shape
+        for _ in range(n):
+            rng.integers(0, t - self.seq_len - 1, size=(w, self.batch_size))
+
+
+def rng_state(rng: np.random.Generator) -> dict:
+    """JSON-able snapshot of a Generator's position (the data cursor a
+    full-protocol checkpoint records)."""
+    return rng.bit_generator.state
+
+
+def rng_from_state(state: dict) -> np.random.Generator:
+    """Rebuild a Generator at the exact position `rng_state` captured."""
+    bit_gen = getattr(np.random, state["bit_generator"])()
+    bit_gen.state = state
+    return np.random.Generator(bit_gen)

@@ -1,0 +1,357 @@
+"""Plan-driven production trainer: the launch path through the timeline engine.
+
+`core.timeline` gave the SIMULATOR readiness policies, wall-clock slot
+accounting and event-sparse execution; this module gives the PRODUCTION
+trainer the same contract.  A `TimelinePlan` compiled by **any** registered
+readiness policy (``barrier`` / ``deadline`` / ``gossip`` / user-registered)
+is the single execution schedule:
+
+  * **local segments** (slots between mixing events) run only the gated
+    per-worker grads + inner-optimizer update — a jitted `lax.scan` over
+    stacked per-slot batches of `mll_harness_step`, decomposed into
+    power-of-two chunks so recompiles stay O(log max_run) regardless of how
+    the policy scatters its events,
+  * **mixing events** apply the registered strategy with the phase pinned
+    at trace time (dense / two_stage / ppermute / int8 / ... through the
+    protocol registry), or a composed per-event dense (W, W) operator for
+    partial-participation policies (gossip),
+  * **all-idle runs** of forced plans (the straggler tail of barrier
+    rounds, measured-rate staircases) fast-forward: the data cursor still
+    consumes each slot's draw, but no gradients are computed.
+
+With ``policy="deadline"`` and the Bernoulli gate this reproduces the
+legacy lock-step ``run_training`` tick loop bit for bit (regression-tested
+in tests/test_harness.py) — the launcher is now a thin wrapper over this
+harness, and "simulator" vs "production" are two consumers of one engine.
+
+Beyond the executor, the harness owns the production run lifecycle:
+
+  * ``rate_model="measured"`` — a warmup timing pass profiles each worker's
+    seconds-per-step (`measure_worker_rates`), the derived
+    `timeline.RateCalibration` replaces hand-fed p_i and is serialized next
+    to the plan/checkpoints,
+  * **full-protocol resumable checkpoints** — the entire `MLLTrainState`
+    plus the timeline cursor and the `LMBatcher` data cursor go through
+    `train.checkpoint.save_state`; a killed run restored with
+    ``resume=True`` replays the uninterrupted trajectory bit for bit,
+  * **event-trace export** in the simulator's schema
+    (`timeline.plan_trace`), consumable by `benchmarks/` and the nightly
+    gate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import protocol, timeline
+from repro.core.mllsgd import MLLConfig, MLLState
+from repro.core.simulator import weighted_average
+from repro.data.pipeline import LMBatcher, rng_state
+from repro.train import checkpoint
+from repro.train.train_step import loss_fn, mll_harness_step
+
+PyTree = Any
+
+CALIBRATION_FILE = "calibration.json"
+
+
+# ------------------------------------------------------- rate calibration
+def measure_worker_rates(cfg: ArchConfig, params_stacked: PyTree,
+                         batch: dict, *, reps: int = 3,
+                         skew: tuple[float, ...] | None = None,
+                         ) -> timeline.RateCalibration:
+    """Warmup timing pass: profile each worker's seconds per local gradient
+    step and derive relative rates (fastest worker = 1.0).
+
+    Workers are timed one at a time on their own slice of the stacked
+    params/batch — one compile (shapes are identical across workers), then
+    ``reps`` timed calls each, keeping the median.  ``skew`` multiplies the
+    measured times per worker (testing hook: on a single host all workers
+    share silicon, so heterogeneity must be injected to be visible).
+    """
+    w = jax.tree.leaves(params_stacked)[0].shape[0]
+    if skew is not None and len(skew) != w:
+        raise ValueError(f"need {w} skew factors, got {len(skew)}")
+    grad_one = jax.jit(jax.grad(lambda p, b: loss_fn(p, b, cfg)[0]))
+
+    def worker_slice(tree, i):
+        return jax.tree.map(lambda x: x[i], tree)
+
+    times = []
+    for i in range(w):
+        p_i, b_i = worker_slice(params_stacked, i), worker_slice(batch, i)
+        jax.block_until_ready(grad_one(p_i, b_i))          # compile + warm
+        samples = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(grad_one(p_i, b_i))
+            samples.append(time.perf_counter() - t0)
+        times.append(float(np.median(samples)))
+    if skew is not None:
+        times = [t * float(s) for t, s in zip(times, skew)]
+    return timeline.RateCalibration(step_times=tuple(times))
+
+
+def resolve_measured_network(network, calibration: timeline.RateCalibration):
+    """The network re-rated with measured per-worker rates."""
+    return timeline.network_with_rates(network, calibration.rates)
+
+
+# ----------------------------------------------------------------- harness
+def _stack_batches(batches: list[dict]) -> dict:
+    return {k: jnp.stack([b[k] for b in batches]) for k in batches[0]}
+
+
+class TrainHarness:
+    """Compiled plan executor for the production (transformer) trainer.
+
+    Three jitted entry points, mirroring `timeline.EventExecutor` on the
+    `MLLTrainState` carry:
+
+      * ``local_scan(state, batches, active)`` — lax.scan of the local-only
+        slot body over stacked (k, W, B, S) batches; returns the state and
+        the LAST slot's metrics,
+      * ``event_step[phase](state, batch, active)`` — one slot ending in a
+        subnet/hub round, phase pinned at trace time,
+      * ``dense_step(state, batch, active, op)`` — one slot ending in a
+        composed dense (W, W) operator event (partial-participation
+        policies).
+
+    ``gate_mode`` is fixed per plan: ``"bernoulli"`` multiplies the plan's
+    active mask into the counter-based gate draw (deadline = the legacy
+    lock-step trainer bit for bit), ``"forced"`` uses the mask as the gate.
+    """
+
+    def __init__(self, cfg: ArchConfig, mll: MLLConfig, st: MLLState, *,
+                 gate_mode: str):
+        if gate_mode not in ("bernoulli", "forced"):
+            raise ValueError(f"unknown gate_mode {gate_mode!r}")
+        self.cfg, self.mll, self.st, self.gate_mode = cfg, mll, st, gate_mode
+        step = partial(mll_harness_step, cfg=cfg, mll=mll, st=st,
+                       gate_mode=gate_mode)
+
+        def local_scan_impl(state, batches, active):
+            def body(s, xs):
+                b, act = xs
+                return step(s, b, act)
+            return jax.lax.scan(body, state, (batches, active))
+
+        def last_metrics(state_metrics):
+            state, ms = state_metrics
+            return state, jax.tree.map(lambda m: m[-1], ms)
+
+        self.local_scan = jax.jit(
+            lambda s, b, a: last_metrics(local_scan_impl(s, b, a)))
+        self.event_step = {
+            ph: jax.jit(partial(step, phase=ph))
+            for ph in (protocol.PHASE_SUBNET, protocol.PHASE_HUB)}
+        self.dense_step = jax.jit(lambda s, b, a, op: step(s, b, a, op=op))
+        # all-idle event slots (forced plans: a barrier round whose cost
+        # exceeds tau ends in mixing with every gate at zero) skip the
+        # backward pass and the θ=0 no-op update — loss metrics + mix only
+        self.event_step_idle = {
+            ph: jax.jit(partial(step, phase=ph, compute_grads=False))
+            for ph in (protocol.PHASE_SUBNET, protocol.PHASE_HUB)}
+        self.dense_step_idle = jax.jit(
+            lambda s, b, a, op: step(s, b, a, op=op, compute_grads=False))
+
+    # ------------------------------------------------------------ driver
+    def run_span(self, state: protocol.MLLTrainState,
+                 plan: timeline.TimelinePlan, batcher: LMBatcher,
+                 rng: np.random.Generator, lo: int, hi: int,
+                 last_metrics: dict | None = None,
+                 ) -> tuple[protocol.MLLTrainState, dict | None]:
+        """Execute plan slots [lo, hi) event-sparsely.
+
+        One batch is drawn per slot (the data-cursor contract resumable
+        checkpoints rely on); all-idle runs of forced plans advance the
+        cursor and the slot counter without computing gradients."""
+        op_mats = plan.op_mats or {}
+        forced = plan.gate_mode == "forced"
+        s = lo
+        while s < hi:
+            e = s
+            while e < hi and plan.op_ids[e] == 0 and e not in op_mats:
+                e += 1
+            off = s
+            while off < e:                      # local-only slots [s, e)
+                if forced and not plan.active[off].any():
+                    j = off                      # all-idle run: fast-forward
+                    while j < e and not plan.active[j].any():
+                        j += 1
+                    batcher.skip(rng, j - off)
+                    state = state._replace(step=state.step + (j - off))
+                    off = j
+                    continue
+                j = off
+                if forced:
+                    while j < e and plan.active[j].any():
+                        j += 1
+                else:
+                    j = e
+                run = j - off
+                while run:
+                    k = 1 << (run.bit_length() - 1)   # pow2: O(log) compiles
+                    batches = _stack_batches(
+                        [batcher.sample(rng) for _ in range(k)])
+                    state, last_metrics = self.local_scan(
+                        state, batches, jnp.asarray(plan.active[off:off + k]))
+                    off += k
+                    run -= k
+            if e < hi:                          # the event slot itself
+                batch = batcher.sample(rng)
+                act = jnp.asarray(plan.active[e])
+                idle = forced and not plan.active[e].any()
+                if e in op_mats:
+                    fn = self.dense_step_idle if idle else self.dense_step
+                    state, last_metrics = fn(state, batch, act,
+                                             jnp.asarray(op_mats[e]))
+                else:
+                    table = (self.event_step_idle if idle
+                             else self.event_step)
+                    state, last_metrics = table[int(plan.op_ids[e])](
+                        state, batch, act)
+            s = e + 1
+        return state, last_metrics
+
+
+# ----------------------------------------------------------- run lifecycle
+def plan_config(mll: MLLConfig, network, plan: timeline.TimelinePlan,
+                policy: str, rate_model: str) -> dict:
+    """Everything that determines the compiled plan (and hence the
+    trajectory).  Recorded in every full-protocol checkpoint; a resume
+    whose rebuilt config differs would silently splice two different
+    plans into one 'successful' run — `restore_state` callers must
+    compare (see `launch.train.run_training`)."""
+    return {"policy": policy, "rate_model": rate_model,
+            "slots": int(plan.slots), "tau": int(mll.tau), "q": int(mll.q),
+            "eta": float(mll.eta), "hub_topology": mll.hub_topology,
+            "mixing": mll.mixing, "mix_dtype": mll.mix_dtype,
+            "inner_opt": mll.inner_opt,
+            "inner_opt_args": [list(kv) for kv in mll.inner_opt_args],
+            "seed": int(mll.seed),
+            "workers_per_subnet": [int(n) for n in
+                                   network.workers_per_subnet],
+            "worker_rates": [float(r) for r in network.worker_rates]}
+
+
+@dataclasses.dataclass
+class HarnessRun:
+    """What a plan-driven run returns (the launcher's result contract)."""
+    history: dict
+    avg_params: PyTree
+    train_state: protocol.MLLTrainState
+    plan: timeline.TimelinePlan
+    network: Any
+    calibration: timeline.RateCalibration | None = None
+    trace_path: str | None = None
+
+
+def _boundaries(plan: timeline.TimelinePlan, start: int, stop: int,
+                eval_every: int, checkpoint_every: int) -> list[int]:
+    """Host-surface points: eval slots, checkpoint slots, the stop/end."""
+    pts = {stop}
+    if eval_every:
+        pts.update(range(eval_every, stop + 1, eval_every))
+    if checkpoint_every:
+        pts.update(range(checkpoint_every, stop + 1, checkpoint_every))
+    return sorted(p for p in pts if p > start)
+
+
+def run_plan(cfg: ArchConfig, mll: MLLConfig, network, st: MLLState,
+             plan: timeline.TimelinePlan, batcher: LMBatcher,
+             rng: np.random.Generator, train_state: protocol.MLLTrainState,
+             *, start_slot: int = 0, stop_slot: int | None = None,
+             eval_every: int = 16,
+             checkpoint_dir: str | None = None, checkpoint_every: int = 0,
+             calibration: timeline.RateCalibration | None = None,
+             trace_path: str | None = None, policy: str = "deadline",
+             rate_model: str = "bernoulli",
+             last_worker_loss: list | None = None,
+             run_config: dict | None = None,
+             log: Callable = print) -> HarnessRun:
+    """Drive a compiled `TrainHarness` over the whole plan.
+
+    The slot loop surfaces to the host only at eval/checkpoint boundaries;
+    u_k = X a is computed ONCE per boundary and shared by eval, periodic
+    checkpoints and the final checkpoint.  Checkpoints carry the full
+    protocol state + cursors (`checkpoint.save_state`), so a killed run
+    resumed from ``start_slot`` replays the remaining slots bit for bit.
+
+    ``stop_slot`` executes only slots [start_slot, stop_slot) OF THE SAME
+    PLAN and checkpoints there (policies' plans are budget-dependent —
+    barrier drops rounds that don't fit — so a shorter-budget run is NOT a
+    prefix of a longer one; a partial run of the full plan is).
+    """
+    harness = TrainHarness(cfg, mll, st, gate_mode=plan.gate_mode)
+    a = jnp.asarray(network.a, jnp.float32)
+    eval_fn = jax.jit(partial(loss_fn, cfg=cfg))
+    history = {"step": [], "loss": [], "avg_loss": []}
+    # the most recent per-worker training loss; restored on resume so an
+    # eval boundary inside an all-idle straggler tail records the same
+    # (stale) metric the uninterrupted run would
+    last_metrics = (None if last_worker_loss is None
+                    else {"loss": np.asarray(last_worker_loss, np.float32)})
+    t0 = time.time()
+    done = start_slot
+    final_u = None
+    stop = plan.slots if stop_slot is None else min(stop_slot, plan.slots)
+    for b in _boundaries(plan, start_slot, stop, eval_every,
+                         checkpoint_every):
+        train_state, last_metrics = harness.run_span(
+            train_state, plan, batcher, rng, done, b, last_metrics)
+        done = b
+        u = None
+        if (eval_every and done % eval_every == 0) or done == plan.slots:
+            u = weighted_average(train_state.params, a)
+            eb = batcher.sample(rng)
+            one = {kk: v[0] for kk, v in eb.items()}
+            avg_loss, _ = eval_fn(u, one)
+            wl = (float(last_metrics["loss"].mean())
+                  if last_metrics is not None else float("nan"))
+            history["step"].append(done)
+            history["loss"].append(wl)
+            history["avg_loss"].append(float(avg_loss))
+            log(f"slot {done:5d}  worker-loss {wl:.4f}  u_k-loss "
+                f"{float(avg_loss):.4f}  ({time.time()-t0:.1f}s)")
+        want_ckpt = (checkpoint_dir and checkpoint_every
+                     and done % checkpoint_every == 0) or \
+                    (checkpoint_dir and done == stop)
+        if want_ckpt:
+            if u is None:
+                u = weighted_average(train_state.params, a)
+            checkpoint.save(checkpoint_dir, u, step=done)
+            wl = (None if last_metrics is None else
+                  [float(x) for x in np.asarray(last_metrics["loss"])])
+            checkpoint.save_state(
+                checkpoint_dir, train_state, slot=done,
+                rng_state=rng_state(rng),
+                extra={"policy": policy, "rate_model": rate_model,
+                       "last_worker_loss": wl,
+                       "plan_config": run_config if run_config is not None
+                       else plan_config(mll, network, plan, policy,
+                                        rate_model)})
+        if done == plan.slots:
+            final_u = u
+    # u_k is computed ONCE per boundary and shared by eval + checkpoints;
+    # the final boundary's u is the run's result (recompute only on the
+    # resume-past-the-end no-op path)
+    u = final_u if final_u is not None \
+        else weighted_average(train_state.params, a)
+    out_trace = None
+    if trace_path:
+        meta = {"policy": policy, "rate_model": rate_model,
+                "arch": cfg.name, "source": "launch.harness"}
+        if calibration is not None:
+            meta["calibration"] = calibration.to_json()
+        out_trace = timeline.export_trace(trace_path, plan, **meta)
+    return HarnessRun(history=history, avg_params=u, train_state=train_state,
+                      plan=plan, network=network, calibration=calibration,
+                      trace_path=out_trace)

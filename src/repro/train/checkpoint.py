@@ -1,5 +1,23 @@
 """Numpy-based checkpointing (no orbax offline): flat .npz per pytree +
-a JSON manifest with tree structure, step counter and config digest."""
+a JSON manifest with tree structure, step counter and config digest.
+
+Two levels of checkpoint live here:
+
+* ``save``/``restore`` — any pytree (the legacy averaged-u_k checkpoint the
+  serving path reads).  ``restore`` validates the manifest's recorded
+  treedef AND per-leaf dtypes against the target structure and errors with
+  a clear message on mismatch — restoring a bf16 run into an f32 skeleton
+  (or vice versa) is a config bug, not something to silently cast over.
+* ``save_state``/``restore_state`` — the FULL protocol checkpoint: an
+  entire `MLLTrainState` (params + gated inner-opt state + mixing state +
+  step counter) plus the timeline cursor (slot index) and the `LMBatcher`
+  data cursor (numpy Generator state), so a killed production run resumes
+  to a bit-identical trajectory (`launch.harness`).
+
+bfloat16 / float8 leaves are widened to float32 on disk (npz cannot store
+ml_dtypes) and narrowed back on restore — exact round-trip, since the
+widening is value-preserving.
+"""
 from __future__ import annotations
 
 import json
@@ -11,6 +29,7 @@ import numpy as np
 
 PyTree = Any
 _SEP = "::"
+_STATE_SUBDIR = "state"
 
 
 def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
@@ -36,29 +55,89 @@ def _storable(arr: np.ndarray) -> tuple[np.ndarray, str]:
         return arr.astype(np.float32), name
 
 
+def _replace_into(path: str, name: str, write) -> str:
+    """Write via a temp file + atomic `os.replace` so a kill mid-write can
+    never leave a torn file under the final name."""
+    tmp = os.path.join(path, f".tmp-{os.getpid()}-{name}")
+    write(tmp)
+    os.replace(tmp, os.path.join(path, name))
+    return name
+
+
 def save(path: str, params: PyTree, *, step: int = 0, extra: dict | None = None):
+    """Crash-consistent save: the params go to a step-suffixed .npz first,
+    and the manifest — which names its params file — is atomically replaced
+    LAST.  A kill at any point leaves the previous (manifest, params) pair
+    intact, so a resumed run restores a consistent checkpoint instead of a
+    silently spliced one; superseded params files are pruned after the
+    manifest switch."""
     os.makedirs(path, exist_ok=True)
     flat = _flatten(params)
     stored, dtypes = {}, {}
     for k, v in flat.items():
         stored[k], dtypes[k] = _storable(v)
-    np.savez(os.path.join(path, "params.npz"), **stored)
+    params_file = f"params-{step}.npz"
+    _replace_into(path, params_file, lambda tmp: np.savez(tmp, **stored))
     treedef = jax.tree_util.tree_structure(params)
     manifest = {"step": step, "treedef": str(treedef), "extra": extra or {},
-                "keys": sorted(flat), "dtypes": dtypes}
-    with open(os.path.join(path, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=2)
+                "keys": sorted(flat), "dtypes": dtypes,
+                "params_file": params_file}
+
+    def write_manifest(tmp):
+        with open(tmp, "w") as f:
+            json.dump(manifest, f, indent=2)
+
+    _replace_into(path, "manifest.json", write_manifest)
+    for name in os.listdir(path):       # prune superseded params files
+        if name != params_file and (name == "params.npz" or (
+                name.startswith("params-") and name.endswith(".npz"))):
+            os.remove(os.path.join(path, name))
+
+
+def load_manifest(path: str) -> dict:
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)
+
+
+def _validate(manifest: dict, like: PyTree, flat_like: dict[str, np.ndarray],
+              data_files: list[str]) -> None:
+    """Checkpoint/target structure agreement: keys, treedef, dtypes."""
+    if sorted(flat_like) != sorted(data_files):
+        missing = set(flat_like) ^ set(data_files)
+        raise ValueError(f"checkpoint/tree key mismatch: {sorted(missing)[:5]}")
+    want_treedef = str(jax.tree_util.tree_structure(like))
+    got_treedef = manifest.get("treedef")
+    if got_treedef is not None and got_treedef != want_treedef:
+        raise ValueError(
+            "checkpoint treedef mismatch — the saved pytree structure is not "
+            "the structure being restored into:\n"
+            f"  saved:     {got_treedef}\n"
+            f"  restoring: {want_treedef}")
+    saved_dtypes = manifest.get("dtypes", {})
+    bad = [(k, saved_dtypes[k], str(v.dtype)) for k, v in flat_like.items()
+           if k in saved_dtypes and saved_dtypes[k] != str(v.dtype)]
+    if bad:
+        k, got, want = bad[0]
+        raise ValueError(
+            f"checkpoint dtype mismatch on {len(bad)} leaves (first: {k!r} "
+            f"saved as {got}, restoring into {want}); refusing to silently "
+            "cast — re-export the checkpoint or fix the target dtypes")
 
 
 def restore(path: str, like: PyTree) -> tuple[PyTree, int]:
-    """Restore into the structure of `like` (shape/dtype checked)."""
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
-    data = np.load(os.path.join(path, "params.npz"))
+    """Restore into the structure of `like`.
+
+    The manifest's recorded treedef and per-leaf dtypes must MATCH `like`
+    (shape-checked per leaf as before); on-disk f32 widenings of
+    bfloat16/float8 leaves are narrowed back to the recorded dtype.
+    """
+    manifest = load_manifest(path)
+    # pre-PR4 checkpoints used a fixed filename; the manifest now points at
+    # its own (step-suffixed, atomically replaced) params file
+    data = np.load(os.path.join(path,
+                                manifest.get("params_file", "params.npz")))
     flat_like = _flatten(like)
-    if sorted(flat_like) != sorted(data.files):
-        missing = set(flat_like) ^ set(data.files)
-        raise ValueError(f"checkpoint/tree key mismatch: {sorted(missing)[:5]}")
+    _validate(manifest, like, flat_like, list(data.files))
     leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
     new_leaves = []
     for path_k, leaf in leaves_like:
@@ -66,8 +145,45 @@ def restore(path: str, like: PyTree) -> tuple[PyTree, int]:
         arr = data[key]
         if arr.shape != leaf.shape:
             raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
-        # cast back through jnp (handles bfloat16 / ml_dtypes targets)
+        # narrow the on-disk f32 widening back to the recorded leaf dtype
+        # (bfloat16 / ml_dtypes targets; dtype agreement validated above)
         new_leaves.append(jax.numpy.asarray(arr).astype(leaf.dtype))
     tree = jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(like), new_leaves)
     return tree, int(manifest["step"])
+
+
+# ----------------------------------------------- full protocol checkpoints
+def state_dir(path: str) -> str:
+    """Where the full-protocol checkpoint lives inside a checkpoint dir
+    (the dir root keeps the legacy averaged-u_k params for serving)."""
+    return os.path.join(path, _STATE_SUBDIR)
+
+
+def save_state(path: str, train_state: PyTree, *, slot: int,
+               rng_state: dict | None = None,
+               extra: dict | None = None) -> str:
+    """Full protocol checkpoint: the entire `MLLTrainState` pytree (params +
+    inner-opt + mixing state + step), the timeline cursor ``slot``, and the
+    data cursor ``rng_state`` (a numpy Generator's ``bit_generator.state``,
+    JSON-able).  Restores to a bit-identical trajectory via
+    `restore_state`."""
+    d = state_dir(path)
+    payload = dict(extra or ())
+    if rng_state is not None:
+        payload["rng_state"] = rng_state
+    save(d, train_state, step=slot, extra=payload)
+    return d
+
+
+def restore_state(path: str, like: PyTree) -> tuple[PyTree, int, dict]:
+    """-> (train_state, slot, extra) with full treedef/dtype validation.
+    ``extra`` carries what `save_state` stored (``rng_state``, ...)."""
+    d = state_dir(path)
+    if not os.path.exists(os.path.join(d, "manifest.json")):
+        raise FileNotFoundError(
+            f"no full-protocol checkpoint under {path!r} (expected "
+            f"{d}/manifest.json) — was the run checkpointed with "
+            "save_state?")
+    state, slot = restore(d, like)
+    return state, slot, load_manifest(d).get("extra", {})

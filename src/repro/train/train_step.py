@@ -14,7 +14,10 @@ The full MLL-SGD production tick is:
 `mll_transformer_step` is the stateless fast path (sgd + stateless mixing);
 `mll_transformer_state_step` carries a full `MLLTrainState` so stateful
 inner optimizers (momentum/adamw) and stateful mixing (int8_ef error
-feedback) run end-to-end on the production mesh.
+feedback) run end-to-end on the production mesh.  `mll_harness_step` is the
+PLAN-DRIVEN slot: the same tick with the gate/mixing decided host-side by a
+`core.timeline` readiness policy (the production harness in
+`launch.harness` compiles `TimelinePlan`s into scans over it).
 
 No gradient collective crosses the worker axis during local steps — that is
 the paper's communication saving, visible directly in the dry-run HLO.
@@ -29,8 +32,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core import protocol
 from repro.core.mllsgd import MLLConfig, MLLState, apply_schedule, gate_sample, gated_sgd_update
 from repro.core.protocol import MLLTrainState, protocol_step
+from repro.core.timeline import apply_event_operator
 from repro.models import model as model_mod
 from repro.models.pjit_utils import constraint
 
@@ -157,3 +162,74 @@ def mll_transformer_state_step(train_state: MLLTrainState, batch: dict,
     new_state = protocol_step(train_state, grads, mll, st,
                               static_phase=static_phase)
     return new_state, metrics
+
+
+def mll_harness_step(train_state: MLLTrainState, batch: dict,
+                     active: jnp.ndarray, cfg: ArchConfig, mll: MLLConfig,
+                     st: MLLState, *, gate_mode: str = "bernoulli",
+                     phase: int = protocol.PHASE_LOCAL,
+                     op: jnp.ndarray | None = None,
+                     compute_grads: bool = True,
+                     spmd_axis_name=None, impl: str = "xla",
+                     remat: str = "none", microbatch: int = 1,
+                     ) -> tuple[MLLTrainState, dict]:
+    """One PLAN-DRIVEN production slot: the tick of `mll_transformer_state_step`
+    with the schedule's ``lax.switch`` replaced by a statically known event.
+
+    A `TimelinePlan` (readiness policy) decides host-side what each slot
+    does; this step executes it:
+
+      * ``active`` is the plan's per-worker progress mask for the slot.
+        Under ``gate_mode="bernoulli"`` it multiplies the counter-based
+        Bernoulli(p_i) draw of Eq. (3) — with an all-ones mask the gate is
+        bit-for-bit `mll_transformer_state_step`'s; under ``"forced"`` the
+        mask IS the gate (progress was already drawn host-side by the
+        policy, e.g. barrier NegBin trials or the measured-rate staircase).
+      * ``phase`` pins the mixing event at trace time (local slots skip the
+        identity contraction entirely); policies that mix a strict subset
+        of workers pass a composed dense (W, W) operator as ``op`` instead.
+
+    The local-only specialisation (``phase=PHASE_LOCAL``, ``op=None``) is
+    the scan body of the harness's event-sparse local segments.
+
+    ``compute_grads=False`` is the ALL-IDLE event slot (forced plans: the
+    straggler tail of a barrier round ends in mixing with every worker's
+    gate at zero): the backward pass and the θ=0 inner update — a state
+    no-op by construction — are skipped; only the per-worker loss (the
+    metrics contract) and the mixing event run.
+    """
+    if gate_mode not in ("bernoulli", "forced"):
+        raise ValueError(f"unknown gate_mode {gate_mode!r}")
+    step = train_state.step.astype(jnp.int32) + 1
+    if compute_grads:
+        grads, metrics = per_worker_grads(train_state.params, batch, cfg,
+                                          spmd_axis_name=spmd_axis_name,
+                                          impl=impl, remat=remat,
+                                          microbatch=microbatch,
+                                          accum_dtype=mll.accum_dtype)
+        active = active.astype(st.rates.dtype)
+        if gate_mode == "bernoulli":
+            theta = gate_sample(mll.seed, step, st.rates) * active
+        else:
+            theta = active
+        optimizer = protocol.resolve_inner_optimizer(mll)
+        params, opt_state = protocol.gated_inner_update(
+            optimizer, train_state.params, train_state.opt_state, grads,
+            theta)
+    else:
+        loss, m = jax.vmap(partial(loss_fn, cfg=cfg, impl=impl,
+                                   remat=remat))(train_state.params, batch)
+        metrics = {"loss": loss, **m}
+        params, opt_state = train_state.params, train_state.opt_state
+    mix_state = train_state.mix_state
+    if op is not None:
+        params = apply_event_operator(params, op)
+    elif phase != protocol.PHASE_LOCAL:
+        # mix_state is always populated up front (init_train_state) — a
+        # structure change mid-run would retrace every compiled segment
+        strategy = protocol.resolve_mixing(mll)
+        if phase == protocol.PHASE_SUBNET:
+            params, mix_state = strategy.subnet_with_state(params, st, mix_state)
+        else:
+            params, mix_state = strategy.hub_with_state(params, st, mix_state)
+    return MLLTrainState(params, opt_state, mix_state, step), metrics

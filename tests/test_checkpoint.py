@@ -1,0 +1,134 @@
+"""Checkpoint contract (`train.checkpoint`): manifest validation (treedef +
+dtypes, clear errors), bfloat16 round-trip through the f32 widening, and the
+full-protocol `save_state`/`restore_state` with timeline + data cursors."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.protocol import MLLTrainState
+from repro.data.pipeline import rng_from_state, rng_state
+from repro.train import checkpoint
+
+
+def _tree():
+    return {"layer": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                      "b": jnp.ones((3,), jnp.float32)},
+            "scale": jnp.asarray(2.5, jnp.float32)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    checkpoint.save(str(tmp_path), t, step=7)
+    back, step = checkpoint.restore(str(tmp_path), jax.tree.map(jnp.zeros_like, t))
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_bf16_roundtrip_exact(tmp_path):
+    """bf16 leaves are widened to f32 on disk (npz can't store ml_dtypes)
+    and narrowed back on restore — value-exact both ways."""
+    t = {"w": jnp.asarray([[1.5, -2.25], [3.0, 0.125]], jnp.bfloat16),
+         "b": jnp.linspace(-1, 1, 8).astype(jnp.bfloat16)}
+    checkpoint.save(str(tmp_path), t)
+    like = jax.tree.map(jnp.zeros_like, t)
+    back, _ = checkpoint.restore(str(tmp_path), like)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(back)):
+        assert b.dtype == jnp.bfloat16
+        np.testing.assert_array_equal(np.asarray(a.astype(jnp.float32)),
+                                      np.asarray(b.astype(jnp.float32)))
+    manifest = checkpoint.load_manifest(str(tmp_path))
+    assert set(manifest["dtypes"].values()) == {"bfloat16"}
+
+
+def test_restore_rejects_dtype_mismatch(tmp_path):
+    """A bf16 checkpoint must not silently cast into an f32 skeleton."""
+    t = {"w": jnp.ones((2, 2), jnp.bfloat16)}
+    checkpoint.save(str(tmp_path), t)
+    with pytest.raises(ValueError, match="dtype mismatch"):
+        checkpoint.restore(str(tmp_path), {"w": jnp.ones((2, 2), jnp.float32)})
+
+
+def test_restore_rejects_treedef_mismatch(tmp_path):
+    """Same flattened keys, different container structure (list vs tuple
+    both flatten to "a::0") -> the recorded treedef catches it."""
+    checkpoint.save(str(tmp_path), {"a": [jnp.ones(2)]})
+    assert checkpoint.restore(str(tmp_path), {"a": [jnp.zeros(2)]})
+    with pytest.raises(ValueError, match="treedef mismatch"):
+        checkpoint.restore(str(tmp_path), {"a": (jnp.zeros(2),)})
+
+
+def test_restore_rejects_key_mismatch(tmp_path):
+    checkpoint.save(str(tmp_path), {"a": {"x": jnp.ones(2)}})
+    with pytest.raises(ValueError, match="key mismatch"):
+        checkpoint.restore(str(tmp_path), {"a": {"x": jnp.ones(2),
+                                                 "y": jnp.ones(2)}})
+
+
+def test_restore_rejects_shape_mismatch(tmp_path):
+    t = {"w": jnp.ones((2, 2))}
+    checkpoint.save(str(tmp_path), t)
+    with pytest.raises(ValueError, match="shape"):
+        checkpoint.restore(str(tmp_path), {"w": jnp.ones((2, 3))})
+
+
+def test_save_state_restore_state_full_protocol(tmp_path):
+    """The entire MLLTrainState (params + opt + mix state + step) plus the
+    timeline cursor and the data cursor round-trip; the legacy averaged-u
+    checkpoint at the dir root stays untouched."""
+    state = MLLTrainState(
+        params={"w": jnp.ones((4, 3), jnp.float32) * 2},
+        opt_state={"inner": {"m": jnp.zeros((4, 3), jnp.float32)},
+                   "counts": jnp.asarray([1, 2, 3, 4], jnp.int32)},
+        mix_state=(),
+        step=jnp.asarray(9, jnp.int32))
+    rng = np.random.default_rng(123)
+    rng.integers(0, 100, size=(3,))          # advance the cursor
+    checkpoint.save(str(tmp_path), {"u": jnp.ones(3)}, step=9)
+    checkpoint.save_state(str(tmp_path), state, slot=9,
+                          rng_state=rng_state(rng),
+                          extra={"policy": "gossip"})
+    like = jax.tree.map(jnp.zeros_like, state)
+    back, slot, extra = checkpoint.restore_state(str(tmp_path), like)
+    assert slot == 9 and extra["policy"] == "gossip"
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # data cursor: the restored generator continues the exact stream
+    r2 = rng_from_state(extra["rng_state"])
+    np.testing.assert_array_equal(rng.integers(0, 1 << 30, size=(5,)),
+                                  r2.integers(0, 1 << 30, size=(5,)))
+    # the dir root still holds the legacy averaged params for serving
+    u, step = checkpoint.restore(str(tmp_path), {"u": jnp.zeros(3)})
+    assert step == 9
+
+
+def test_save_is_crash_consistent(tmp_path):
+    """The manifest atomically points at its own step-suffixed params file:
+    a kill between the params write and the manifest switch leaves the
+    PREVIOUS (manifest, params) pair restorable — never a spliced one —
+    and superseded params files are pruned after the switch."""
+    import os
+    t1 = {"w": jnp.ones((2, 2)) * 1}
+    t2 = {"w": jnp.ones((2, 2)) * 2}
+    checkpoint.save(str(tmp_path), t1, step=1)
+    # emulate a kill after the step-2 params landed but BEFORE the manifest
+    # switch: the step-2 file exists, manifest still names params-1.npz
+    flat = {"w": np.asarray(t2["w"])}
+    np.savez(str(tmp_path / "params-2.npz"), **flat)
+    back, step = checkpoint.restore(str(tmp_path), {"w": jnp.zeros((2, 2))})
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(back["w"]), 1.0)
+    # a completed save switches the manifest and prunes the old file
+    checkpoint.save(str(tmp_path), t2, step=2)
+    assert checkpoint.load_manifest(str(tmp_path))["params_file"] == \
+        "params-2.npz"
+    assert not os.path.exists(tmp_path / "params-1.npz")
+    back, step = checkpoint.restore(str(tmp_path), {"w": jnp.zeros((2, 2))})
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(back["w"]), 2.0)
+
+
+def test_restore_state_missing_is_clear(tmp_path):
+    with pytest.raises(FileNotFoundError, match="full-protocol"):
+        checkpoint.restore_state(str(tmp_path), {"w": jnp.ones(2)})

@@ -1,0 +1,299 @@
+"""Plan-driven production trainer (`launch.harness` / `launch.train`):
+
+* the harness under ``policy="deadline"`` + the Bernoulli gate replays the
+  pre-refactor per-tick ``run_training`` loop bit for bit (frozen here as
+  the reference),
+* every registered readiness policy runs end-to-end on the smoke
+  transformer config,
+* a killed run (``stop_slot`` + full-protocol checkpoint) resumed with
+  ``resume=True`` reproduces the uninterrupted trajectory bit for bit,
+* measured-rate calibration round-trips and drives a plan,
+* the exported event trace carries the simulator's schema.
+"""
+import dataclasses
+import json
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.core import timeline
+from repro.core.mllsgd import MLLConfig, build_network, build_state
+from repro.core.protocol import init_train_state
+from repro.core.simulator import weighted_average
+from repro.data.pipeline import LMBatcher, make_token_stream
+from repro.launch.harness import measure_worker_rates
+from repro.launch.train import (TrainLoopConfig, replicate_params,
+                                run_training)
+from repro.models import model as model_mod
+from repro.train.train_step import loss_fn, mll_transformer_state_step
+
+CFG = get_smoke_config("qwen2-0.5b")
+RATES = (1.0, 0.8, 1.0, 0.6)
+QUIET = dict(log=lambda *a, **k: None)
+
+
+def _mll(**kw):
+    base = dict(tau=2, q=2, eta=0.05, hub_topology="ring",
+                worker_rates=RATES)
+    base.update(kw)
+    return MLLConfig(**base)
+
+
+def _loop(**kw):
+    base = dict(steps=8, eval_every=4, seq_len=32, batch_per_worker=2,
+                tokens_per_worker=4096)
+    base.update(kw)
+    return TrainLoopConfig(**base)
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _legacy_run_training(cfg, mll, loop, num_subnets=2, workers_per_subnet=2):
+    """The pre-refactor lock-step tick loop, frozen as the reference: one
+    jitted `mll_transformer_state_step` per tick (`lax.switch` schedule),
+    eval + u_k from the shared data cursor."""
+    network = build_network(
+        dataclasses.replace(mll, granularity="worker_per_data"),
+        num_subnets, workers_per_subnet)
+    st = build_state(mll, network)
+    w = network.num_workers
+    params = model_mod.init_model(jax.random.PRNGKey(loop.seed), cfg)
+    stacked = replicate_params(params, w)
+    stream = make_token_stream(w, loop.tokens_per_worker,
+                               vocab_size=cfg.vocab_size, seed=loop.seed)
+    batcher = LMBatcher(stream, loop.seq_len, loop.batch_per_worker)
+    rng = np.random.default_rng(loop.seed)
+    train_state = init_train_state(stacked, cfg=mll)
+    step_fn = jax.jit(partial(mll_transformer_state_step,
+                              cfg=cfg, mll=mll, st=st))
+    a = jnp.asarray(network.a, jnp.float32)
+    eval_fn = jax.jit(partial(loss_fn, cfg=cfg))
+    history = {"step": [], "loss": [], "avg_loss": []}
+    for k in range(1, loop.steps + 1):
+        batch = batcher.sample(rng)
+        train_state, metrics = step_fn(train_state, batch)
+        if k % loop.eval_every == 0 or k == loop.steps:
+            u = weighted_average(train_state.params, a)
+            eb = batcher.sample(rng)
+            one = {kk: v[0] for kk, v in eb.items()}
+            avg_loss, _ = eval_fn(u, one)
+            history["step"].append(k)
+            history["loss"].append(float(metrics["loss"].mean()))
+            history["avg_loss"].append(float(avg_loss))
+    return {"history": history,
+            "avg_params": weighted_average(train_state.params, a),
+            "train_state": train_state}
+
+
+# ------------------------------------------- harness/lock-step equivalence
+def test_deadline_harness_reproduces_legacy_loop_bit_for_bit():
+    """policy='deadline' + Bernoulli gate IS the legacy per-tick loop: same
+    gate draws (counter-based), same batch stream, same mixing schedule —
+    the event-segmented scan must match bit for bit, heterogeneous rates
+    included (p_i = 1 is the special case of an all-ones rate vector)."""
+    mll, loop = _mll(), _loop()
+    old = _legacy_run_training(CFG, mll, loop)
+    new = run_training(CFG, mll, loop, **QUIET)
+    _assert_trees_equal(old["avg_params"], new["avg_params"])
+    _assert_trees_equal(old["train_state"].params, new["train_state"].params)
+    assert old["history"] == new["history"]
+
+
+def test_deadline_harness_matches_legacy_homogeneous_p1():
+    mll, loop = _mll(worker_rates=1.0), _loop(steps=6, eval_every=3)
+    old = _legacy_run_training(CFG, mll, loop)
+    new = run_training(CFG, mll, loop, **QUIET)
+    _assert_trees_equal(old["avg_params"], new["avg_params"])
+    assert old["history"] == new["history"]
+
+
+# ------------------------------------------------ all policies end-to-end
+@pytest.mark.parametrize("policy,rate_model", [
+    ("barrier", "bernoulli"),
+    ("deadline", "deterministic"),
+    ("gossip", "bernoulli"),
+])
+def test_policies_end_to_end_on_transformer(tmp_path, policy, rate_model):
+    """Every registered readiness policy drives the production transformer
+    step: finite losses, events fired, trace exported in the shared
+    schema."""
+    trace = str(tmp_path / f"trace_{policy}.json")
+    mll = _mll(worker_rates=(1.0, 0.9, 1.0, 0.7))
+    loop = _loop(steps=10, eval_every=5, policy=policy,
+                 rate_model=rate_model, trace_path=trace)
+    out = run_training(CFG, mll, loop, **QUIET)
+    assert np.isfinite(out["history"]["avg_loss"]).all()
+    assert out["plan"].rounds_completed >= 1
+    assert out["plan"].events
+    doc = timeline.load_trace(trace)
+    assert doc["schema"] == timeline.TRACE_SCHEMA
+    assert doc["events"] and doc["meta"]["policy"] == policy
+    assert len(doc["busy_slots"]) == 4
+
+
+def test_gossip_policy_requires_dense_mixing():
+    mll = _mll(mixing="two_stage")
+    with pytest.raises(ValueError, match="dense"):
+        run_training(CFG, mll, _loop(policy="gossip"), **QUIET)
+
+
+# -------------------------------------------------------- kill / resume
+def test_kill_resume_bit_identical(tmp_path):
+    """Killing a run at a mid-plan checkpoint (same plan, ``stop_slot``)
+    and resuming from the full-protocol checkpoint reproduces the
+    uninterrupted trajectory bit for bit — params, history tail, plan."""
+    mll = _mll(worker_rates=(1.0, 0.5, 1.0, 0.25))
+    kw = dict(steps=10, eval_every=5, policy="gossip")
+    full = run_training(CFG, mll, _loop(
+        **kw, checkpoint_dir=str(tmp_path / "full"), checkpoint_every=5),
+        **QUIET)
+    ck = str(tmp_path / "killed")
+    run_training(CFG, mll, _loop(**kw, checkpoint_dir=ck,
+                                 checkpoint_every=5, stop_slot=5), **QUIET)
+    resumed = run_training(CFG, mll, _loop(**kw, checkpoint_dir=ck,
+                                           checkpoint_every=5, resume=True),
+                           **QUIET)
+    _assert_trees_equal(full["avg_params"], resumed["avg_params"])
+    _assert_trees_equal(full["train_state"].params,
+                        resumed["train_state"].params)
+    _assert_trees_equal(full["train_state"].opt_state,
+                        resumed["train_state"].opt_state)
+    # the resumed history is the tail of the uninterrupted one
+    n = len(resumed["history"]["step"])
+    assert n >= 1
+    for k in ("step", "loss", "avg_loss"):
+        assert resumed["history"][k] == full["history"][k][-n:]
+    assert [(e.slot, e.kind, e.participants) for e in full["plan"].events] \
+        == [(e.slot, e.kind, e.participants) for e in resumed["plan"].events]
+
+
+def test_kill_resume_inside_idle_straggler_tail(tmp_path):
+    """Resume where the first span after the kill point is ALL-IDLE (the
+    barrier straggler tail): the restored last worker-loss must make the
+    resumed history identical to the uninterrupted run — not NaN."""
+    # deterministic barrier: trials = ceil(tau / p) = [2, 2, 2, 8] -> every
+    # round costs 8 slots, active only on its first 2; slots 2-7 all-idle
+    mll = _mll(worker_rates=(1.0, 1.0, 1.0, 0.25))
+    kw = dict(steps=16, eval_every=2, policy="barrier",
+              rate_model="deterministic")
+    full = run_training(CFG, mll, _loop(
+        **kw, checkpoint_dir=str(tmp_path / "full"), checkpoint_every=4),
+        **QUIET)
+    assert not full["plan"].active[4:6].any()    # kill point is mid-tail
+    ck = str(tmp_path / "killed")
+    run_training(CFG, mll, _loop(**kw, checkpoint_dir=ck, checkpoint_every=4,
+                                 stop_slot=4), **QUIET)
+    resumed = run_training(CFG, mll, _loop(**kw, checkpoint_dir=ck,
+                                           checkpoint_every=4, resume=True),
+                           **QUIET)
+    _assert_trees_equal(full["avg_params"], resumed["avg_params"])
+    n = len(resumed["history"]["step"])
+    for k in ("step", "loss", "avg_loss"):
+        assert resumed["history"][k] == full["history"][k][-n:]
+    assert np.isfinite(resumed["history"]["loss"]).all()
+
+
+def test_resume_rejects_mismatched_config(tmp_path):
+    """A resume under a different policy / schedule / rate vector would
+    silently splice two plans into one trajectory — it must error, naming
+    the differing fields."""
+    ck = str(tmp_path / "ck")
+    mll = _mll()
+    run_training(CFG, mll, _loop(steps=6, eval_every=3, checkpoint_dir=ck,
+                                 checkpoint_every=3, stop_slot=3), **QUIET)
+    with pytest.raises(ValueError, match="resume config mismatch.*policy"):
+        run_training(CFG, mll, _loop(steps=6, eval_every=3,
+                                     checkpoint_dir=ck, policy="barrier",
+                                     resume=True), **QUIET)
+    with pytest.raises(ValueError, match="resume config mismatch.*slots"):
+        run_training(CFG, mll, _loop(steps=12, eval_every=3,
+                                     checkpoint_dir=ck, resume=True), **QUIET)
+    ok = run_training(CFG, mll, _loop(steps=6, eval_every=3,
+                                      checkpoint_dir=ck, resume=True),
+                      **QUIET)
+    assert ok["history"]["step"][-1] == 6
+
+
+def test_resume_requires_checkpoint(tmp_path):
+    with pytest.raises(FileNotFoundError, match="full-protocol checkpoint"):
+        run_training(CFG, _mll(), _loop(
+            resume=True, checkpoint_dir=str(tmp_path / "nope")), **QUIET)
+    with pytest.raises(ValueError, match="checkpoint-dir"):
+        run_training(CFG, _mll(), _loop(resume=True), **QUIET)
+    with pytest.raises(ValueError, match="stop-slot"):
+        run_training(CFG, _mll(), _loop(stop_slot=4), **QUIET)
+
+
+# ------------------------------------------------------ measured rates
+def test_measured_rate_calibration_roundtrip(tmp_path):
+    calib = timeline.RateCalibration(step_times=(0.01, 0.02, 0.01, 0.04))
+    np.testing.assert_allclose(calib.rates, [1.0, 0.5, 1.0, 0.25])
+    p = str(tmp_path / "calib.json")
+    calib.save(p)
+    back = timeline.RateCalibration.load(p)
+    assert back == calib
+    with pytest.raises(ValueError, match="positive step time"):
+        timeline.RateCalibration(step_times=(0.01, -1.0))
+    doc = json.loads(open(p).read())
+    assert doc["schema"] == "mll-rate-calibration/v1"
+
+
+def test_measured_rate_model_end_to_end(tmp_path):
+    """Warmup timing pass -> calibration serialized next to the plan ->
+    deterministic staircase plan; a re-run of the same directory reuses
+    the serialized calibration instead of re-measuring."""
+    ck = str(tmp_path / "ck")
+    mll = _mll(worker_rates=1.0)
+    loop = _loop(steps=6, eval_every=3, rate_model="measured",
+                 checkpoint_dir=ck, checkpoint_every=3)
+    out = run_training(CFG, mll, loop, **QUIET)
+    assert out["calibration"] is not None
+    calib_path = os.path.join(ck, "calibration.json")
+    assert os.path.exists(calib_path)
+    assert out["plan"].gate_mode == "forced"
+    again = run_training(CFG, mll, loop, **QUIET)
+    assert again["calibration"] == timeline.RateCalibration.load(calib_path)
+    _assert_trees_equal(out["avg_params"], again["avg_params"])
+
+
+def test_measure_worker_rates_skew_hook():
+    net_w = 4
+    params = model_mod.init_model(jax.random.PRNGKey(0), CFG)
+    stacked = replicate_params(params, net_w)
+    stream = make_token_stream(net_w, 2048, vocab_size=CFG.vocab_size, seed=0)
+    batch = LMBatcher(stream, 16, 2).sample(np.random.default_rng(0))
+    calib = measure_worker_rates(CFG, stacked, batch, reps=1,
+                                 skew=(1.0, 2.0, 1.0, 4.0))
+    # identical silicon + injected skew -> rates follow the skew closely
+    assert calib.rates[1] < 0.75 and calib.rates[3] < 0.5
+    assert calib.rates.max() == 1.0
+
+
+# ---------------------------------------------------------- trace schema
+def test_harness_trace_schema_matches_simulator_plans():
+    """One schema for both engine consumers: a trace built from a
+    simulator-side plan and a harness-exported trace carry identical
+    structure."""
+    from repro.core import baselines
+    from repro.core.hierarchy import MLLSchedule
+    net, _ = baselines.mll_sgd("complete", [2, 2], tau=2, q=2,
+                               worker_rates=[1.0, 0.9, 0.8, 0.7])
+    plan = timeline.get_policy("barrier").plan(
+        net, MLLSchedule(tau=2, q=2), 24, np.random.default_rng(0))
+    sim_doc = timeline.plan_trace(plan, policy="barrier", source="simulator")
+    assert sim_doc["schema"] == timeline.TRACE_SCHEMA
+    assert set(sim_doc) == {"schema", "slots", "slots_used",
+                            "rounds_completed", "gate_mode", "busy_slots",
+                            "idle_slots", "round_costs", "events", "meta"}
+    for e in sim_doc["events"]:
+        assert set(e) == {"slot", "kind", "participants", "round_index"}

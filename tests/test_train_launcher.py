@@ -1,5 +1,6 @@
 """End-to-end launcher test: the production code path trains a tiny LM on
 CPU and the averaged model's loss goes down."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -31,5 +32,8 @@ def test_run_training_checkpoint(tmp_path):
                            checkpoint_every=2)
     out = run_training(cfg, mll, loop, num_subnets=1, workers_per_subnet=2,
                        log=lambda *a, **k: None)
-    import os
-    assert os.path.exists(tmp_path / "ck" / "params.npz")
+    from repro.train import checkpoint
+    u, step = checkpoint.restore(str(tmp_path / "ck"), out["avg_params"])
+    assert step == 4
+    for a, b in zip(jax.tree.leaves(out["avg_params"]), jax.tree.leaves(u)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
