@@ -1,25 +1,48 @@
-"""Kernel micro-benchmarks.
+"""Kernel micro-benchmarks: fwd AND fwd+bwd step time vs the XLA reference.
 
-On this CPU container the Pallas kernels run in interpret mode (correctness,
-not speed), so the numbers that matter here are (a) XLA wall-time of the
-reference vs the chunked pure-XLA attention (the memory-bounded fallback the
-dry-run lowers), and (b) allclose deltas of the Pallas kernels vs ref at
-benchmark shapes.  TPU wall-time belongs to the roofline analysis.
+The tau-step local SGD loop dominates MLL-SGD wall-clock, and since the
+backward kernels landed the *training* step differentiates straight through
+the Pallas kernels — so the numbers that matter are the full fwd+bwd times
+of (a) `ops.flash_attention` (custom-vjp dq/dkv kernels) and (b)
+`ops.slstm_scan` (reverse-time adjoint kernel) against `jax.grad` of the
+pure-XLA references, plus the max-abs gradient deltas at benchmark shapes.
+
+On this CPU container the Pallas kernels run in interpret mode (correctness
++ trend, not speed — the XLA lines are the meaningful wall-clock here; TPU
+wall-time belongs to the roofline analysis).  Every emit() is snapshotted
+to BENCH_kernels.json at the repo root (the perf trajectory the nightly
+``kernel-throughput`` job regression-gates), following the PR-3 contract:
+
+  PYTHONPATH=src python -m benchmarks.bench_kernels [--smoke|--full] [--gate]
+
+``--gate`` fails if any recorded ``*_us`` timing got slower than
+``committed / gate-ratio`` (collapse detection — the committed baseline was
+measured on a different machine class), if a gradient-correctness claim
+emits 0, or if a committed metric vanished from the run.  A passing gated
+run refreshes BENCH_kernels.json BY DESIGN; a failed gate leaves it
+untouched.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import emit
-from repro.configs.registry import get_smoke_config
 from repro.kernels import ref
+from repro.kernels import ops as kops
 from repro.kernels.flash_attention import flash_attention_fwd
 from repro.kernels.hier_mix import hier_mix_chunks
 from repro.models.attention import _sdpa, _sdpa_chunked, causal_mask
+
+# the committed baseline comes from a different machine class than CI, and
+# interpret-mode timings are noisy; the gate only catches collapses
+# (>1/0.25 = 4x slowdowns), the correctness claims are exact
+GATE_RATIO = 0.25
 
 
 def _time(fn, *args, iters=5):
@@ -31,9 +54,17 @@ def _time(fn, *args, iters=5):
     return (time.time() - t0) / iters * 1e6
 
 
-def bench_attention_impls():
+def _max_err(a, b) -> float:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return max(float(jnp.max(jnp.abs(x.astype(jnp.float32) -
+                                     y.astype(jnp.float32))))
+               for x, y in zip(la, lb))
+
+
+def bench_attention_impls(seq: int):
+    from repro.configs.registry import get_smoke_config
     cfg = get_smoke_config("qwen3-1.7b")
-    b, s, h, hkv, hd = 1, 1024, 4, 2, 64
+    b, s, h, hkv, hd = 1, seq, 4, 2, 64
     key = jax.random.PRNGKey(0)
     q = jax.random.normal(key, (b, s, h, hd), jnp.float32)
     k = jax.random.normal(key, (b, s, hkv, hd), jnp.float32)
@@ -50,13 +81,71 @@ def bench_attention_impls():
                                np.asarray(f_chunk(q, k, v)), atol=2e-5)
     emit("kernels/attention/chunked_matches_full", 1)
 
-    out = flash_attention_fwd(q[:, :256], k[:, :256], v[:, :256],
-                              causal=True, interpret=True)
-    want = ref.flash_attention_ref(q[:, :256], k[:, :256], v[:, :256],
-                                   causal=True)
+    qs, ks, vs = q[:, :256], k[:, :256], v[:, :256]
+    out = flash_attention_fwd(qs, ks, vs, causal=True,
+                              interpret=jax.default_backend() != "tpu")
+    want = ref.flash_attention_ref(qs, ks, vs, causal=True)
     err = float(jnp.abs(out - want).max())
     emit("kernels/flash_attention/interpret_max_err", err)
     assert err < 1e-4
+
+
+def bench_flash_fwd_bwd(seq: int):
+    """Full training-step cost of the attention core: value AND grads wrt
+    q/k/v, Pallas custom-vjp vs jax.grad of the XLA reference."""
+    b, s, h, hkv, hd = 1, seq, 4, 2, 64
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hkv, hd),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, hkv, hd),
+                          jnp.float32)
+
+    def loss_kernel(q_, k_, v_):
+        return (kops.flash_attention(q_, k_, v_, True, 0, 0.0) ** 2).sum()
+
+    def loss_ref(q_, k_, v_):
+        return (ref.flash_attention_ref(q_, k_, v_, causal=True) ** 2).sum()
+
+    g_kernel = jax.jit(jax.value_and_grad(loss_kernel, argnums=(0, 1, 2)))
+    g_ref = jax.jit(jax.value_and_grad(loss_ref, argnums=(0, 1, 2)))
+    t_kernel = _time(g_kernel, q, k, v, iters=3)
+    t_ref = _time(g_ref, q, k, v, iters=3)
+    emit("kernels/flash_attention/fwd_bwd_us", t_kernel,
+         extra="pallas custom-vjp (interpret off-TPU)")
+    emit("kernels/flash_attention/xla_ref_fwd_bwd_us", t_ref)
+    err = _max_err(g_kernel(q, k, v)[1], g_ref(q, k, v)[1])
+    emit("kernels/flash_attention/grad_max_err", err)
+    emit("kernels/flash_attention/grad_matches_ref", int(err < 1e-3))
+
+
+def bench_slstm_fwd_bwd(seq: int):
+    """Full training-step cost of the sLSTM recurrence: value AND grads wrt
+    (zx, R, b), reverse-time Pallas adjoint vs jax.grad of the scan ref."""
+    b, t, h, hd = 4, seq, 2, 32
+    key = jax.random.PRNGKey(2)
+    zx = 0.5 * jax.random.normal(key, (b, t, h, 4 * hd), jnp.float32)
+    r = 0.3 * jax.random.normal(jax.random.fold_in(key, 1), (h, hd, 4 * hd),
+                                jnp.float32)
+    bias = 0.1 * jax.random.normal(jax.random.fold_in(key, 2), (h, 4 * hd),
+                                   jnp.float32)
+
+    def loss_kernel(z_, r_, b_):
+        return (kops.slstm_scan(z_, r_, b_, chunk=32) ** 2).sum()
+
+    def loss_ref(z_, r_, b_):
+        return (ref.slstm_scan_ref(z_, r_, b_) ** 2).sum()
+
+    g_kernel = jax.jit(jax.value_and_grad(loss_kernel, argnums=(0, 1, 2)))
+    g_ref = jax.jit(jax.value_and_grad(loss_ref, argnums=(0, 1, 2)))
+    t_kernel = _time(g_kernel, zx, r, bias, iters=3)
+    t_ref = _time(g_ref, zx, r, bias, iters=3)
+    emit("kernels/slstm/fwd_bwd_us", t_kernel,
+         extra="pallas reverse-time adjoint (interpret off-TPU)")
+    emit("kernels/slstm/xla_ref_fwd_bwd_us", t_ref)
+    err = _max_err(g_kernel(zx, r, bias)[1], g_ref(zx, r, bias)[1])
+    emit("kernels/slstm/grad_max_err", err)
+    emit("kernels/slstm/grad_matches_ref", int(err < 1e-3))
 
 
 def bench_hier_mix():
@@ -81,10 +170,64 @@ def bench_hier_mix():
     emit("kernels/hier_mix/fusion_traffic_ratio", 5.0 / 3.0)
 
 
-def main(full: bool = False):
-    bench_attention_impls()
+def check_gate(gate_ratio: float) -> int:
+    """Compare fresh numbers against the committed BENCH_kernels.json."""
+    baseline = common.load_bench_json("kernels")
+    fresh = common.bench_records("kernels")
+    failures = []
+    if baseline:
+        for name, rec in baseline.items():
+            f = fresh.get(name)
+            if f is None:
+                failures.append(f"{name}: in committed BENCH_kernels.json "
+                                f"but not measured by this run — regenerate "
+                                f"the baseline if the rename is intentional")
+                continue
+            if name.endswith("_us") and f["value"] > rec["value"] / gate_ratio:
+                failures.append(f"{name}: {f['value']:.0f}us > committed "
+                                f"{rec['value']:.0f}us / {gate_ratio}")
+    for name, rec in fresh.items():
+        if name.endswith("matches_ref") and not rec["value"]:
+            failures.append(f"{name}: kernel gradients drifted from the "
+                            f"XLA reference")
+    for f in failures:
+        print(f"GATE FAIL {f}", flush=True)
+    return 1 if failures else 0
+
+
+def main(full: bool = False, smoke: bool = False, gate: bool = False,
+         gate_ratio: float = GATE_RATIO) -> int:
+    common.begin_bench("kernels")
+    seq = 2048 if full else 1024
+    # interpret-mode pallas pays a python-level cost per grid step: keep the
+    # fwd+bwd shapes small enough for CI while still covering multi-tile
+    # grids on both time axes
+    grad_seq = 512 if full else 256
+    slstm_seq = 256 if full else 128
+    bench_attention_impls(seq)
+    bench_flash_fwd_bwd(grad_seq)
+    bench_slstm_fwd_bwd(slstm_seq)
     bench_hier_mix()
+    common.end_bench("kernels")
+    rc = check_gate(gate_ratio) if gate else 0
+    if rc:
+        print("GATE FAIL: BENCH_kernels.json left untouched", flush=True)
+        return rc
+    common.write_bench_json("kernels", common.bench_records("kernels"))
+    return rc
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="bigger sequences per measurement")
+    ap.add_argument("--smoke", action="store_true",
+                    help="nightly-CI scale (the default is already "
+                         "smoke-sized; flag kept for CLI symmetry)")
+    ap.add_argument("--gate", action="store_true",
+                    help="fail on regression vs the committed "
+                         "BENCH_kernels.json / gradient-correctness claims")
+    ap.add_argument("--gate-ratio", type=float, default=GATE_RATIO)
+    args = ap.parse_args()
+    raise SystemExit(main(full=args.full, smoke=args.smoke, gate=args.gate,
+                          gate_ratio=args.gate_ratio))

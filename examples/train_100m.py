@@ -9,7 +9,7 @@ readiness policy (deadline = the paper's MLL-SGD timing; barrier = Local
 SGD straggler semantics; gossip = overlapping subnet rounds).
 
   PYTHONPATH=src python examples/train_100m.py [--steps 200] [--full-100m]
-      [--policy deadline|barrier|gossip]
+      [--policy deadline|barrier|gossip] [--impl xla|flash|pallas]
 """
 import argparse
 import dataclasses
@@ -44,6 +44,11 @@ def main():
     ap.add_argument("--q", type=int, default=4)
     ap.add_argument("--policy", default="deadline",
                     choices=available_policies())
+    ap.add_argument("--impl", default="xla",
+                    choices=("xla", "flash", "pallas"),
+                    help="'flash'/'pallas' train through the native Pallas "
+                         "kernels (fwd + custom-vjp bwd); 'xla' is the "
+                         "pure-XLA path")
     args = ap.parse_args()
 
     cfg = build_config(args.full_100m)
@@ -53,7 +58,8 @@ def main():
                     worker_rates=(1.0, 0.8, 1.0, 0.6), mixing=mixing)
     loop = TrainLoopConfig(steps=args.steps, eval_every=args.tau * args.q,
                            seq_len=128, batch_per_worker=4,
-                           tokens_per_worker=1 << 16, policy=args.policy)
+                           tokens_per_worker=1 << 16, policy=args.policy,
+                           impl=args.impl)
     out = run_training(cfg, mll, loop, num_subnets=2, workers_per_subnet=2)
     hist = out["history"]
     plan = out["plan"]

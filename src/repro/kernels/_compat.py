@@ -1,0 +1,17 @@
+"""jax-version compatibility for the Pallas TPU kernels.
+
+jax <= 0.4.x ships the TPU compiler params as `TPUCompilerParams`; newer
+releases renamed it to `CompilerParams`.  Every kernel module imports the
+resolved class from here so the guard (a clear error on unsupported jax
+versions instead of an opaque NoneType call) lives in one place.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+if CompilerParams is None:  # pragma: no cover - depends on jax version
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams — unsupported jax version for the Pallas kernels")

@@ -1,22 +1,43 @@
-"""Blocked flash attention (Pallas, TPU target).
+"""Blocked flash attention (Pallas, TPU target): forward AND backward.
 
-Tiling: grid = (batch, q_heads, T/block_q, S/block_kv); the kv axis is the
-minormost ("arbitrary") grid dimension, accumulating the online softmax in
-VMEM scratch (running max m, normalizer l, weighted output acc) and writing
-the tile out on the last kv step.  Block shapes are MXU/VPU aligned:
-block_q x block_kv defaults to 128 x 128, head_dim padded to a multiple of
-128 by the wrapper if needed (all assigned archs have head_dim in
-{64, 80, 128}; 64/80 still map onto the MXU, just at lower utilisation —
-recorded in the roofline notes).
+Forward tiling: grid = (batch, q_heads, T/block_q, S/block_kv); the kv axis
+is the minormost ("arbitrary") grid dimension, accumulating the online
+softmax in VMEM scratch (running max m, normalizer l, weighted output acc)
+and writing the tile + the logsumexp residual out on the last kv step.
+Block shapes are MXU/VPU aligned: block_q x block_kv defaults to 128 x 128.
 
-VMEM budget per program instance (bf16 inputs, f32 scratch):
-  q tile 128x128x2 = 32 KiB, k/v tiles 2x32 KiB, acc/m/l f32 = 64+1 KiB
-  -> well under the ~16 MiB v5e VMEM ceiling; block sizes are tunable.
+Head-dim padding: head_dim is zero-padded up to a multiple of 64 by the
+wrappers (80 -> 128 for the stablelm-style heads; 64/128 stay put).  Because
+the pad lanes of q/k/v/do are EXACT zeros, every matmul of both passes
+(q.kT, p.v, do.vT, ds.k, ds.q, p.do) carries exact zeros through them — the
+sliced-off gradient lanes are exactly zero, not merely small
+(regression-tested at head_dim 80 in tests/test_kernels.py).
 
-GQA: the q-head grid index h maps to kv head h // (H // Hkv) in the k/v index
-maps.  Causal and sliding-window masking are applied per-tile from absolute
-q/kv positions; fully-masked tiles short-circuit via `pl.when` (the causal
-upper triangle and windows far in the past skip their matmuls entirely).
+Backward: recomputation-based, two kernels sharing the forward's masking and
+softcap semantics.  The forward saves only `o` and the per-row logsumexp
+``lse = m + log(l)``; the backward recomputes the probability tile
+``p = exp(s - lse)`` instead of materializing the (T, S) matrix:
+
+  * dq kernel — grid (B, H, T/block_q, S/block_kv), kv minormost arbitrary;
+    dq accumulates over the kv axis in VMEM scratch,
+  * dkv kernel — grid (B, Hkv, S/block_kv, T/block_q), q minormost
+    arbitrary; dk/dv accumulate over the q-block axis in VMEM scratch and
+    reduce over the q-head GQA group with a static in-kernel loop (the
+    whole group's q/do tiles arrive in one block).
+
+``delta = rowsum(do * o)`` is precomputed in f32 by the wrapper (one fused
+elementwise-reduce pass; the FlashAttention "preprocess" step).  Fully
+masked tiles short-circuit in all three kernels via `pl.when` — the causal
+upper triangle and windows far in the past skip their matmuls entirely.
+
+VMEM budget per program instance (bf16 inputs, f32 scratch, hd padded):
+  forward: q tile 128x128x2 = 32 KiB, k/v tiles 2x32 KiB,
+           acc/m/l f32 = 64+1 KiB
+  dq:      q/do/k/v tiles 4x32 KiB, dq acc f32 64 KiB, lse/delta 2x0.5 KiB
+  dkv:     k/v tiles 2x32 KiB, q/do tiles 2x(group x 32 KiB),
+           dk/dv acc f32 2x64 KiB, lse/delta 2x(group x 0.5 KiB)
+  -> every variant stays well under the ~16 MiB v5e VMEM ceiling up to
+     GQA groups of 8 at head_dim 128; block sizes are tunable.
 """
 from __future__ import annotations
 
@@ -26,13 +47,56 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams as _CompilerParams
 
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
-            scale: float, causal: bool, window: int, softcap: float,
-            block_q: int, block_kv: int, kv_len: int):
+def _round_up(n: int, m: int) -> int:
+    return (n + m - 1) // m * m
+
+
+def _pad_head_dim(hd: int) -> int:
+    """Lane alignment: head_dim rounds up to a multiple of 64 (all assigned
+    archs have head_dim in {64, 80, 128}; 80 pads to 128)."""
+    return _round_up(hd, 64)
+
+
+def _pad4(x: jnp.ndarray, t_pad: int, hd_pad: int) -> jnp.ndarray:
+    if t_pad or hd_pad:
+        x = jnp.pad(x, ((0, 0), (0, t_pad), (0, 0), (0, hd_pad)))
+    return x
+
+
+def _tile_live(q_start, k_start, *, causal: bool, window: int,
+               block_q: int, block_kv: int):
+    """Tile-level reachability (skip fully-masked tiles entirely)."""
+    live = jnp.bool_(True)
+    if causal:
+        live &= k_start <= q_start + block_q - 1          # below/at diagonal
+    if window > 0:
+        live &= k_start + block_kv - 1 >= q_start - window + 1  # inside window
+    return live
+
+
+def _tile_mask(q_start, k_start, *, causal: bool, window: int,
+               block_q: int, block_kv: int, kv_len: int):
+    qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+    kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+    mask = kpos < kv_len
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    return mask
+
+
+# ------------------------------------------------------------------ forward
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref, *,
+                scale: float, causal: bool, window: int, softcap: float,
+                block_q: int, block_kv: int, kv_len: int):
     qb = pl.program_id(2)
     kb = pl.program_id(3)
     nkv = pl.num_programs(3)
@@ -45,13 +109,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
     q_start = qb * block_q
     k_start = kb * block_kv
-
-    # tile-level reachability (skip fully-masked tiles entirely)
-    live = jnp.bool_(True)
-    if causal:
-        live &= k_start <= q_start + block_q - 1          # below/at diagonal
-    if window > 0:
-        live &= k_start + block_kv - 1 >= q_start - window + 1  # inside window
+    live = _tile_live(q_start, k_start, causal=causal, window=window,
+                      block_q=block_q, block_kv=block_kv)
 
     @pl.when(live)
     def _compute():
@@ -61,13 +120,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bkv)
         if softcap > 0:
             s = softcap * jnp.tanh(s / softcap)
-        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
-        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
-        mask = kpos < kv_len
-        if causal:
-            mask &= kpos <= qpos
-        if window > 0:
-            mask &= (qpos - kpos) < window
+        mask = _tile_mask(q_start, k_start, causal=causal, window=window,
+                          block_q=block_q, block_kv=block_kv, kv_len=kv_len)
         s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_ref[:, 0]                                   # (bq,)
@@ -88,6 +142,61 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         l = l_ref[:, 0]
         denom = jnp.where(l == 0.0, 1.0, l)
         o_ref[0, :, 0, :] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+        lse_ref[0, 0, :] = m_ref[:, 0] + jnp.log(denom)
+
+
+def flash_attention_fwd_res(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                            causal: bool = True, window: int = 0,
+                            softcap: float = 0.0, block_q: int = 128,
+                            block_kv: int = 128, interpret: bool = False
+                            ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """q: (B, T, H, hd), k/v: (B, S, Hkv, hd) -> (o (B, T, H, hd),
+    lse (B, H, T) f32) — the logsumexp residual the backward recomputes
+    probabilities from."""
+    b, t, h, hd = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    group = h // hkv
+    hd_p = _pad_head_dim(hd)
+    block_q = min(block_q, t)
+    block_kv = min(block_kv, s)
+    t_pad = -t % block_q
+    s_pad = -s % block_kv
+    q = _pad4(q, t_pad, hd_p - hd)
+    k = _pad4(k, s_pad, hd_p - hd)
+    v = _pad4(v, s_pad, hd_p - hd)
+    tp, sp = t + t_pad, s + s_pad
+
+    grid = (b, h, tp // block_q, sp // block_kv)
+    kernel = functools.partial(
+        _fwd_kernel, scale=1.0 / np.sqrt(hd), causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_kv=block_kv, kv_len=s)
+
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd_p), lambda b_, h_, qb, kb: (b_, qb, h_, 0)),
+            pl.BlockSpec((1, block_kv, 1, hd_p), lambda b_, h_, qb, kb: (b_, kb, h_ // group, 0)),
+            pl.BlockSpec((1, block_kv, 1, hd_p), lambda b_, h_, qb, kb: (b_, kb, h_ // group, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, 1, hd_p), lambda b_, h_, qb, kb: (b_, qb, h_, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b_, h_, qb, kb: (b_, h_, qb)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, tp, h, hd_p), q.dtype),
+            jax.ShapeDtypeStruct((b, h, tp), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd_p), jnp.float32),   # acc
+            pltpu.VMEM((block_q, 1), jnp.float32),      # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),      # normalizer l
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :t, :, :hd], lse[:, :, :t]
 
 
 def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
@@ -96,44 +205,183 @@ def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                         block_kv: int = 128, interpret: bool = False
                         ) -> jnp.ndarray:
     """q: (B, T, H, hd), k/v: (B, S, Hkv, hd) -> (B, T, H, hd)."""
+    return flash_attention_fwd_res(q, k, v, causal=causal, window=window,
+                                   softcap=softcap, block_q=block_q,
+                                   block_kv=block_kv, interpret=interpret)[0]
+
+
+# ----------------------------------------------------------------- backward
+def _recompute_p_ds(q, k, v, do, lse_row, delta_row, mask, *,
+                    softcap: float):
+    """Shared bwd tile math: p from the lse residual, ds with the softcap
+    chain rule.  q arrives pre-scaled; all f32."""
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))     # (bq, bkv)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    p = jnp.where(mask, jnp.exp(s - lse_row[:, None]), 0.0)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))   # (bq, bkv)
+    ds = p * (dp - delta_row[:, None])
+    if softcap > 0:
+        ds = ds * (1.0 - (s / softcap) ** 2)                    # 1 - tanh^2
+    return p, ds
+
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+                   acc_ref, *, scale: float, causal: bool, window: int,
+                   softcap: float, block_q: int, block_kv: int, kv_len: int):
+    qb = pl.program_id(2)
+    kb = pl.program_id(3)
+    nkv = pl.num_programs(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qb * block_q
+    k_start = kb * block_kv
+    live = _tile_live(q_start, k_start, causal=causal, window=window,
+                      block_q=block_q, block_kv=block_kv)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32) * scale
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        do = do_ref[0, :, 0, :].astype(jnp.float32)
+        mask = _tile_mask(q_start, k_start, causal=causal, window=window,
+                          block_q=block_q, block_kv=block_kv, kv_len=kv_len)
+        _, ds = _recompute_p_ds(q, k, v, do, lse_ref[0, 0, :],
+                                delta_ref[0, 0, :], mask, softcap=softcap)
+        acc_ref[...] += jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ()))) * scale
+
+    @pl.when(kb == nkv - 1)
+    def _finalize():
+        dq_ref[0, :, 0, :] = acc_ref[...].astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    dk_ref, dv_ref, dk_acc, dv_acc, *, scale: float,
+                    causal: bool, window: int, softcap: float, block_q: int,
+                    block_kv: int, kv_len: int, group: int):
+    kb = pl.program_id(2)
+    qb = pl.program_id(3)
+    nq = pl.num_programs(3)
+
+    @pl.when(qb == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q_start = qb * block_q
+    k_start = kb * block_kv
+    live = _tile_live(q_start, k_start, causal=causal, window=window,
+                      block_q=block_q, block_kv=block_kv)
+
+    @pl.when(live)
+    def _compute():
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        mask = _tile_mask(q_start, k_start, causal=causal, window=window,
+                          block_q=block_q, block_kv=block_kv, kv_len=kv_len)
+        # dk/dv reduce over the q-head GQA group: the block carries the whole
+        # group's q/do tiles, the loop is static (unrolled at trace time)
+        for g in range(group):
+            q = q_ref[0, :, g, :].astype(jnp.float32) * scale
+            do = do_ref[0, :, g, :].astype(jnp.float32)
+            p, ds = _recompute_p_ds(q, k, v, do, lse_ref[0, g, :],
+                                    delta_ref[0, g, :], mask, softcap=softcap)
+            dv_acc[...] += jax.lax.dot_general(
+                p, do, (((0,), (0,)), ((), ())))                # (bkv, hd)
+            dk_acc[...] += jax.lax.dot_general(
+                ds, q, (((0,), (0,)), ((), ())))                # q pre-scaled
+
+    @pl.when(qb == nq - 1)
+    def _finalize():
+        dk_ref[0, :, 0, :] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, :, 0, :] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def flash_attention_bwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        o: jnp.ndarray, lse: jnp.ndarray, do: jnp.ndarray, *,
+                        causal: bool = True, window: int = 0,
+                        softcap: float = 0.0, block_q: int = 128,
+                        block_kv: int = 128, interpret: bool = False
+                        ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Recomputation-based backward. q/do/o: (B, T, H, hd),
+    k/v: (B, S, Hkv, hd), lse: (B, H, T) -> (dq, dk, dv) matching the
+    primal shapes/dtypes (dk/dv reduced over the q-head group)."""
     b, t, h, hd = q.shape
-    s, hkv = k.shape[1], k.shape[2]
+    s_len, hkv = k.shape[1], k.shape[2]
     group = h // hkv
+    hd_p = _pad_head_dim(hd)
     block_q = min(block_q, t)
-    block_kv = min(block_kv, s)
+    block_kv = min(block_kv, s_len)
     t_pad = -t % block_q
-    s_pad = -s % block_kv
+    s_pad = -s_len % block_kv
+    # preprocess: delta_i = sum_d do_id * o_id, in f32 (one elementwise pass)
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+    delta = jnp.moveaxis(delta, 2, 1)                           # (B, H, T)
     if t_pad:
-        q = jnp.pad(q, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
-    if s_pad:
-        k = jnp.pad(k, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
-    tp, sp = t + t_pad, s + s_pad
+        lse = jnp.pad(lse, ((0, 0), (0, 0), (0, t_pad)))
+        delta = jnp.pad(delta, ((0, 0), (0, 0), (0, t_pad)))
+    qp = _pad4(q, t_pad, hd_p - hd)
+    dop = _pad4(do, t_pad, hd_p - hd)
+    kp = _pad4(k, s_pad, hd_p - hd)
+    vp = _pad4(v, s_pad, hd_p - hd)
+    tp, sp = t + t_pad, s_len + s_pad
+    scale = 1.0 / np.sqrt(hd)
 
-    grid = (b, h, tp // block_q, sp // block_kv)
-    kernel = functools.partial(
-        _kernel, scale=1.0 / np.sqrt(hd), causal=causal, window=window,
-        softcap=softcap, block_q=block_q, block_kv=block_kv, kv_len=s)
-
-    from jax.experimental.pallas import tpu as pltpu
-
-    out = pl.pallas_call(
-        kernel,
-        grid=grid,
+    dq_kernel = functools.partial(
+        _bwd_dq_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_kv=block_kv, kv_len=s_len)
+    dq = pl.pallas_call(
+        dq_kernel,
+        grid=(b, h, tp // block_q, sp // block_kv),
         in_specs=[
-            pl.BlockSpec((1, block_q, 1, hd), lambda b_, h_, qb, kb: (b_, qb, h_, 0)),
-            pl.BlockSpec((1, block_kv, 1, hd), lambda b_, h_, qb, kb: (b_, kb, h_ // group, 0)),
-            pl.BlockSpec((1, block_kv, 1, hd), lambda b_, h_, qb, kb: (b_, kb, h_ // group, 0)),
+            pl.BlockSpec((1, block_q, 1, hd_p), lambda b_, h_, qb, kb: (b_, qb, h_, 0)),
+            pl.BlockSpec((1, block_kv, 1, hd_p), lambda b_, h_, qb, kb: (b_, kb, h_ // group, 0)),
+            pl.BlockSpec((1, block_kv, 1, hd_p), lambda b_, h_, qb, kb: (b_, kb, h_ // group, 0)),
+            pl.BlockSpec((1, block_q, 1, hd_p), lambda b_, h_, qb, kb: (b_, qb, h_, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b_, h_, qb, kb: (b_, h_, qb)),
+            pl.BlockSpec((1, 1, block_q), lambda b_, h_, qb, kb: (b_, h_, qb)),
         ],
-        out_specs=pl.BlockSpec((1, block_q, 1, hd), lambda b_, h_, qb, kb: (b_, qb, h_, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, tp, h, hd), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((block_q, hd), jnp.float32),   # acc
-            pltpu.VMEM((block_q, 1), jnp.float32),    # running max m
-            pltpu.VMEM((block_q, 1), jnp.float32),    # normalizer l
-        ],
-        compiler_params=pltpu.CompilerParams(
+        out_specs=pl.BlockSpec((1, block_q, 1, hd_p),
+                               lambda b_, h_, qb, kb: (b_, qb, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, tp, h, hd_p), q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, hd_p), jnp.float32)],
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(q, k, v)
-    return out[:, :t]
+    )(qp, kp, vp, dop, lse, delta)
+
+    dkv_kernel = functools.partial(
+        _bwd_dkv_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_kv=block_kv, kv_len=s_len,
+        group=group)
+    dk, dv = pl.pallas_call(
+        dkv_kernel,
+        grid=(b, hkv, sp // block_kv, tp // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, group, hd_p), lambda b_, h_, kb, qb: (b_, qb, h_, 0)),
+            pl.BlockSpec((1, block_kv, 1, hd_p), lambda b_, h_, kb, qb: (b_, kb, h_, 0)),
+            pl.BlockSpec((1, block_kv, 1, hd_p), lambda b_, h_, kb, qb: (b_, kb, h_, 0)),
+            pl.BlockSpec((1, block_q, group, hd_p), lambda b_, h_, kb, qb: (b_, qb, h_, 0)),
+            pl.BlockSpec((1, group, block_q), lambda b_, h_, kb, qb: (b_, h_, qb)),
+            pl.BlockSpec((1, group, block_q), lambda b_, h_, kb, qb: (b_, h_, qb)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_kv, 1, hd_p), lambda b_, h_, kb, qb: (b_, kb, h_, 0)),
+            pl.BlockSpec((1, block_kv, 1, hd_p), lambda b_, h_, kb, qb: (b_, kb, h_, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, sp, hkv, hd_p), k.dtype),
+            jax.ShapeDtypeStruct((b, sp, hkv, hd_p), v.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_kv, hd_p), jnp.float32),
+                        pltpu.VMEM((block_kv, hd_p), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qp, kp, vp, dop, lse, delta)
+    return (dq[:, :t, :, :hd], dk[:, :s_len, :, :hd], dv[:, :s_len, :, :hd])

@@ -56,14 +56,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.packing import pack, pack_spec, unpack
 
-# jax <= 0.4.x ships the TPU compiler params as TPUCompilerParams; newer
-# releases renamed it to CompilerParams.  Accept either.
-_CompilerParams = getattr(pltpu, "CompilerParams",
-                          getattr(pltpu, "TPUCompilerParams", None))
-if _CompilerParams is None:
-    raise ImportError(
-        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
-        "TPUCompilerParams — unsupported jax version for the hier_mix kernel")
+from repro.kernels._compat import CompilerParams as _CompilerParams
 
 
 def _kernel(x_ref, g_ref, t_ref, theta_ref, o_ref, *, eta: float):

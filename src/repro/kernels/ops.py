@@ -1,26 +1,27 @@
 """Public jit'd wrappers for the Pallas kernels.
 
-`flash_attention` is differentiable: the Pallas kernel computes the forward
-pass; the backward pass falls back to the XLA reference VJP (a TPU backward
-flash kernel is listed as future work in DESIGN.md §9 — training defaults to
-impl="xla" so the dry-run HLO and gradients stay fully native either way).
+`flash_attention` and `slstm_scan` are differentiable END TO END through
+Pallas: the forward kernels save compact residuals (attention: `o` + the
+per-row logsumexp; sLSTM: the state entering each time chunk) and
+`jax.custom_vjp` routes the backward through the recomputation-based
+backward kernels in `flash_attention.py` / `slstm_scan.py` — there is no
+silent XLA fallback, so ``impl="flash"``/``impl="pallas"`` trains natively
+through the production harness.
 
 On non-TPU backends the wrappers run the kernels in interpret mode so the
-whole test suite exercises the real kernel bodies on CPU.
+whole test suite exercises the real kernel bodies (both passes) on CPU.
 """
 from __future__ import annotations
 
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
-from repro.kernels import ref as ref_mod
-from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels import flash_attention as fa_mod
+from repro.kernels import slstm_scan as slstm_mod
 from repro.kernels.hier_mix import (  # noqa: F401  (re-exported operators)
     GroupedOperator, hier_mix_chunks, hier_mix_packed as _hier_mix_packed,
     hier_mix_tree, make_grouped_operator)
-from repro.kernels.slstm_scan import slstm_scan as _slstm_scan_kernel
 
 
 def _interpret_default() -> bool:
@@ -31,20 +32,23 @@ def _interpret_default() -> bool:
 @partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
 def flash_attention(q, k, v, causal: bool = True, window: int = 0,
                     softcap: float = 0.0):
-    return flash_attention_fwd(q, k, v, causal=causal, window=window,
-                               softcap=softcap, interpret=_interpret_default())
+    return fa_mod.flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                      softcap=softcap,
+                                      interpret=_interpret_default())
 
 
 def _fa_fwd(q, k, v, causal, window, softcap):
-    out = flash_attention(q, k, v, causal, window, softcap)
-    return out, (q, k, v)
+    out, lse = fa_mod.flash_attention_fwd_res(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        interpret=_interpret_default())
+    return out, (q, k, v, out, lse)
 
 
 def _fa_bwd(causal, window, softcap, res, dout):
-    q, k, v = res
-    _, vjp = jax.vjp(lambda q_, k_, v_: ref_mod.flash_attention_ref(
-        q_, k_, v_, causal=causal, window=window, softcap=softcap), q, k, v)
-    return vjp(dout)
+    q, k, v, out, lse = res
+    return fa_mod.flash_attention_bwd(
+        q, k, v, out, lse, dout, causal=causal, window=window,
+        softcap=softcap, interpret=_interpret_default())
 
 
 flash_attention.defvjp(_fa_fwd, _fa_bwd)
@@ -76,9 +80,30 @@ def hier_mix_packed(stacked_params, stacked_grads, op, theta, eta: float, *,
 
 
 # ------------------------------------------------------------- slstm scan
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _slstm_scan_vjp(zx, r_gates, b_gates, block_b: int, chunk: int):
+    return slstm_mod.slstm_scan(zx, r_gates, b_gates, block_b=block_b,
+                                chunk=chunk, interpret=_interpret_default())
+
+
+def _slstm_fwd(zx, r_gates, b_gates, block_b, chunk):
+    h, bounds = slstm_mod.slstm_scan_fwd_res(
+        zx, r_gates, b_gates, block_b=block_b, chunk=chunk,
+        interpret=_interpret_default())
+    return h, (zx, r_gates, b_gates, bounds)
+
+
+def _slstm_bwd(block_b, chunk, res, dh):
+    zx, r_gates, b_gates, bounds = res
+    return slstm_mod.slstm_scan_bwd(
+        zx, r_gates, b_gates, bounds, dh, block_b=block_b, chunk=chunk,
+        interpret=_interpret_default())
+
+
+_slstm_scan_vjp.defvjp(_slstm_fwd, _slstm_bwd)
+
+
 def slstm_scan(zx, r_gates, b_gates, *, block_b: int = 8, chunk: int = 128):
-    """Fused sLSTM recurrence (forward; the backward pass falls back to the
-    XLA scan path in xlstm.slstm_train — use impl="xla" for training until
-    a backward kernel lands; serving/prefill benefit immediately)."""
-    return _slstm_scan_kernel(zx, r_gates, b_gates, block_b=block_b,
-                              chunk=chunk, interpret=_interpret_default())
+    """Fused sLSTM recurrence, differentiable through the reverse-time
+    Pallas backward kernel (adjoint state stays in VMEM across chunks)."""
+    return _slstm_scan_vjp(zx, r_gates, b_gates, block_b, chunk)

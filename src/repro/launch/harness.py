@@ -66,7 +66,7 @@ CALIBRATION_FILE = "calibration.json"
 def measure_worker_rates(cfg: ArchConfig, params_stacked: PyTree,
                          batch: dict, *, reps: int = 3,
                          skew: tuple[float, ...] | None = None,
-                         ) -> timeline.RateCalibration:
+                         impl: str = "xla") -> timeline.RateCalibration:
     """Warmup timing pass: profile each worker's seconds per local gradient
     step and derive relative rates (fastest worker = 1.0).
 
@@ -79,7 +79,8 @@ def measure_worker_rates(cfg: ArchConfig, params_stacked: PyTree,
     w = jax.tree.leaves(params_stacked)[0].shape[0]
     if skew is not None and len(skew) != w:
         raise ValueError(f"need {w} skew factors, got {len(skew)}")
-    grad_one = jax.jit(jax.grad(lambda p, b: loss_fn(p, b, cfg)[0]))
+    grad_one = jax.jit(jax.grad(lambda p, b: loss_fn(p, b, cfg,
+                                                     impl=impl)[0]))
 
     def worker_slice(tree, i):
         return jax.tree.map(lambda x: x[i], tree)
@@ -130,12 +131,17 @@ class TrainHarness:
     """
 
     def __init__(self, cfg: ArchConfig, mll: MLLConfig, st: MLLState, *,
-                 gate_mode: str):
+                 gate_mode: str, impl: str = "xla"):
         if gate_mode not in ("bernoulli", "forced"):
             raise ValueError(f"unknown gate_mode {gate_mode!r}")
+        if impl not in ("xla", "flash", "pallas", "chunked", "auto"):
+            # an unrecognized impl would silently train through the XLA
+            # attention path — the exact fallback this harness rules out
+            raise ValueError(f"unknown impl {impl!r}")
         self.cfg, self.mll, self.st, self.gate_mode = cfg, mll, st, gate_mode
+        self.impl = impl
         step = partial(mll_harness_step, cfg=cfg, mll=mll, st=st,
-                       gate_mode=gate_mode)
+                       gate_mode=gate_mode, impl=impl)
 
         def local_scan_impl(state, batches, active):
             def body(s, xs):
@@ -275,7 +281,7 @@ def run_plan(cfg: ArchConfig, mll: MLLConfig, network, st: MLLState,
              trace_path: str | None = None, policy: str = "deadline",
              rate_model: str = "bernoulli",
              last_worker_loss: list | None = None,
-             run_config: dict | None = None,
+             run_config: dict | None = None, impl: str = "xla",
              log: Callable = print) -> HarnessRun:
     """Drive a compiled `TrainHarness` over the whole plan.
 
@@ -290,9 +296,9 @@ def run_plan(cfg: ArchConfig, mll: MLLConfig, network, st: MLLState,
     barrier drops rounds that don't fit — so a shorter-budget run is NOT a
     prefix of a longer one; a partial run of the full plan is).
     """
-    harness = TrainHarness(cfg, mll, st, gate_mode=plan.gate_mode)
+    harness = TrainHarness(cfg, mll, st, gate_mode=plan.gate_mode, impl=impl)
     a = jnp.asarray(network.a, jnp.float32)
-    eval_fn = jax.jit(partial(loss_fn, cfg=cfg))
+    eval_fn = jax.jit(partial(loss_fn, cfg=cfg, impl=impl))
     history = {"step": [], "loss": [], "avg_loss": []}
     # the most recent per-worker training loss; restored on resume so an
     # eval boundary inside an all-idle straggler tail records the same

@@ -67,6 +67,8 @@ class TrainLoopConfig:
     stop_slot: int | None = None     # execute only [start, stop_slot) of the
                                      # plan and checkpoint there (kill point)
     trace_path: str | None = None    # export the event trace (JSON)
+    impl: str = "xla"                # mixer implementation: xla | flash |
+                                     # pallas (native-training Pallas kernels)
 
 
 def replicate_params(params: PyTree, w: int) -> PyTree:
@@ -91,7 +93,7 @@ def _calibrate(cfg: ArchConfig, loop: TrainLoopConfig, stacked: PyTree,
             "rate_model='measured' resume needs the original calibration "
             f"next to the checkpoint ({path})")
     warm = batcher.sample(np.random.default_rng(loop.seed + 0x5eed))
-    calibration = measure_worker_rates(cfg, stacked, warm)
+    calibration = measure_worker_rates(cfg, stacked, warm, impl=loop.impl)
     if path:
         os.makedirs(loop.checkpoint_dir, exist_ok=True)
         calibration.save(path)
@@ -112,6 +114,8 @@ def run_training(cfg: ArchConfig, mll: MLLConfig, loop: TrainLoopConfig,
     reproduces the legacy per-tick loop bit for bit (regression-tested).
     Returns loss history + final averaged params (+ plan/trace/state).
     """
+    if loop.impl not in ("xla", "flash", "pallas"):
+        raise ValueError(f"unknown impl {loop.impl!r} (xla | flash | pallas)")
     if loop.resume and not loop.checkpoint_dir:
         raise ValueError("--resume needs --checkpoint-dir")
     if loop.stop_slot is not None and not loop.checkpoint_dir:
@@ -164,7 +168,7 @@ def run_training(cfg: ArchConfig, mll: MLLConfig, loop: TrainLoopConfig,
     # draws and batch shapes consume the same rng stream)
     current = dict(plan_config(mll, network, plan, loop.policy,
                                loop.rate_model),
-                   arch=cfg.name,
+                   arch=cfg.name, impl=loop.impl,
                    eval_every=loop.eval_every, seq_len=loop.seq_len,
                    batch_per_worker=loop.batch_per_worker,
                    tokens_per_worker=loop.tokens_per_worker,
@@ -173,6 +177,10 @@ def run_training(cfg: ArchConfig, mll: MLLConfig, loop: TrainLoopConfig,
         train_state, start_slot, extra = checkpoint.restore_state(
             loop.checkpoint_dir, train_state)
         saved = extra.get("plan_config")
+        if saved is not None and "impl" not in saved:
+            # checkpoints written before the kernel-training PR carry no
+            # impl field; they were xla-impl runs by construction
+            saved = dict(saved, impl="xla")
         if saved is not None and saved != current:
             diff = {k: (saved.get(k), current[k]) for k in current
                     if saved.get(k) != current[k]}
@@ -193,7 +201,7 @@ def run_training(cfg: ArchConfig, mll: MLLConfig, loop: TrainLoopConfig,
                    calibration=calibration, trace_path=loop.trace_path,
                    policy=loop.policy, rate_model=loop.rate_model,
                    last_worker_loss=last_worker_loss, run_config=current,
-                   log=log)
+                   impl=loop.impl, log=log)
     return {"history": run.history, "avg_params": run.avg_params,
             "network": run.network, "plan": run.plan,
             "train_state": run.train_state, "calibration": run.calibration,
@@ -226,6 +234,11 @@ def main(argv=None):
     ap.add_argument("--rate-model", default="bernoulli", choices=RATE_MODELS,
                     help="'measured' profiles per-device step times in a "
                          "warmup pass instead of using hand-fed p_i")
+    ap.add_argument("--impl", default="xla",
+                    choices=("xla", "flash", "pallas"),
+                    help="mixer implementation for train/eval steps: 'flash'"
+                         "/'pallas' run the native-training Pallas kernels "
+                         "(fwd + custom-vjp bwd), 'xla' the pure-XLA path")
     ap.add_argument("--eval-every", type=int, default=16)
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--resume", action="store_true",
@@ -251,7 +264,7 @@ def main(argv=None):
                            if args.checkpoint_dir else 0,
                            policy=args.policy, rate_model=args.rate_model,
                            resume=args.resume, stop_slot=args.stop_slot,
-                           trace_path=args.trace)
+                           trace_path=args.trace, impl=args.impl)
     out = run_training(cfg, mll, loop, num_subnets=args.subnets,
                        workers_per_subnet=args.workers_per_subnet)
     losses = out["history"]["avg_loss"]

@@ -1,9 +1,12 @@
 """Grouped-query attention with RoPE variants, qk-norm, QKV-bias, logit
 soft-cap, sliding windows, and a rotating-buffer KV cache for decode.
 
-Train/prefill uses either the pure-XLA path (default; differentiable, used by
-the dry-run) or the Pallas flash-attention kernel (``impl="flash"``,
-TPU target, validated in interpret mode).
+Train/prefill uses either the pure-XLA path (default, used by the dry-run)
+or the Pallas flash-attention kernel (``impl="flash"`` / ``"pallas"``, TPU
+target, validated in interpret mode).  Both are differentiable: the kernel
+path carries a custom VJP through the Pallas backward kernels
+(`kernels.flash_attention`), so training steps never fall back to the
+XLA attention.
 """
 from __future__ import annotations
 
@@ -132,7 +135,7 @@ def attention_train(params: PyTree, x: jnp.ndarray, cfg: ArchConfig,
     """Full-sequence causal attention (training / prefill)."""
     b, s, _ = x.shape
     q, k, v = _project_qkv(params, x, cfg, positions)
-    if impl == "flash":
+    if impl in ("flash", "pallas"):
         from repro.kernels import ops as kops
         out = kops.flash_attention(q, k, v, causal=True,
                                    window=cfg.sliding_window,

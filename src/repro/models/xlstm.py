@@ -190,7 +190,7 @@ def slstm_train(params: PyTree, x: jnp.ndarray, cfg: ArchConfig,
     up = constraint(up, "act_batch", "mixer_seq", "xlstm_proj")
     zx = jnp.einsum("ble,eg->blg", up.astype(jnp.float32), params["w_gates"])
 
-    if impl == "flash":
+    if impl in ("flash", "pallas"):
         # fused Pallas recurrence: state stays in VMEM across the sequence
         from repro.kernels import ops as kops
         # gate-major (B,L,4dp) -> per-head (B,L,H,4hd) [i|f|z|o]

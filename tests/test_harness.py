@@ -297,3 +297,60 @@ def test_harness_trace_schema_matches_simulator_plans():
                             "idle_slots", "round_costs", "events", "meta"}
     for e in sim_doc["events"]:
         assert set(e) == {"slot", "kind", "participants", "round_index"}
+
+
+# ------------------------------------------- native-training kernel path
+def test_flash_impl_trains_through_harness_no_fallback(monkeypatch):
+    """A training step with impl="flash" runs through `TrainHarness.run_plan`
+    with every XLA attention path booby-trapped: the forward AND the
+    backward (custom-vjp) go through the Pallas kernels — a silent fallback
+    to `_sdpa`/`_sdpa_chunked`/the pure-jnp reference would raise here."""
+    from repro.kernels import ref as kref
+    from repro.models import attention as attn_mod
+
+    def boom(*a, **k):
+        raise AssertionError("XLA attention fallback under impl='flash'")
+
+    monkeypatch.setattr(attn_mod, "_sdpa", boom)
+    monkeypatch.setattr(attn_mod, "_sdpa_chunked", boom)
+    monkeypatch.setattr(kref, "flash_attention_ref", boom)
+    out = run_training(CFG, _mll(), _loop(steps=4, eval_every=2, seq_len=16,
+                                          impl="flash"), **QUIET)
+    losses = out["history"]["avg_loss"]
+    assert len(losses) == 2 and np.isfinite(losses).all()
+    assert np.isfinite(out["history"]["loss"]).all()
+
+
+def test_impl_pallas_alias_and_unknown_impl_rejected():
+    """impl="pallas" is the CLI-facing alias of the kernel path — it must
+    hit the very same kernels as "flash", bit for bit; anything unknown
+    fails fast (launcher before building the network, harness before
+    compiling a step that would silently fall back to XLA)."""
+    import dataclasses
+    from repro.core.mllsgd import build_network, build_state
+    from repro.launch.harness import TrainHarness
+    from repro.models import attention as attn_mod
+    from repro.models import rope as rope_mod
+    cfg = dataclasses.replace(CFG, param_dtype="float32",
+                              compute_dtype="float32")
+    params = attn_mod.init_attention(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    pos = rope_mod.default_positions(cfg, 2, 16)
+    y_flash = attn_mod.attention_train(params, x, cfg, pos, "flash")
+    y_pallas = attn_mod.attention_train(params, x, cfg, pos, "pallas")
+    np.testing.assert_array_equal(np.asarray(y_flash), np.asarray(y_pallas))
+    from repro.models import xlstm as xlstm_mod
+    xcfg = dataclasses.replace(get_smoke_config("xlstm-125m"),
+                               param_dtype="float32",
+                               compute_dtype="float32")
+    xp = xlstm_mod.init_slstm(jax.random.PRNGKey(2), xcfg)
+    xx = jax.random.normal(jax.random.PRNGKey(3), (2, 12, xcfg.d_model))
+    np.testing.assert_array_equal(
+        np.asarray(xlstm_mod.slstm_train(xp, xx, xcfg, impl="flash")),
+        np.asarray(xlstm_mod.slstm_train(xp, xx, xcfg, impl="pallas")))
+    with pytest.raises(ValueError, match="unknown impl"):
+        run_training(CFG, _mll(), _loop(impl="cuda"), **QUIET)
+    mll = _mll()
+    st = build_state(mll, build_network(mll, 2, 2))
+    with pytest.raises(ValueError, match="unknown impl"):
+        TrainHarness(CFG, mll, st, gate_mode="bernoulli", impl="cuda")
