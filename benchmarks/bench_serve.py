@@ -1,0 +1,216 @@
+"""Serving-engine benchmark: continuous batching vs sequential generate.
+
+The numbers that matter for deployment are tokens/sec out of the merged
+model u_k and per-request latency under load.  This bench measures, on the
+qwen2-0.5b smoke config (f32 on this CPU container):
+
+  * the sequential baseline — requests served one at a time through
+    `serve_step.generate` (batched prefill + dense-cache decode loop);
+  * the continuous-batching engine at batch 8 — the ISSUE's >= 4x
+    tokens/sec claim rides on this pair;
+  * p50/p99 request latency and time-to-first-token vs engine batch size;
+  * the flash-decode kernel's bit-closeness to the XLA paged decode path
+    (<= 2e-5, the same bound the kernel test sweep enforces).
+
+Every emit() is snapshotted to BENCH_serve.json at the repo root (the perf
+trajectory the nightly ``serve-throughput`` job regression-gates):
+
+  PYTHONPATH=src python -m benchmarks.bench_serve [--smoke|--full] [--gate]
+
+``--gate`` fails if throughput fell below ``committed * gate-ratio``, if a
+latency/timing metric got slower than ``committed / gate-ratio``, if a
+correctness/speedup claim emits 0, or if a committed metric vanished from
+the run.  A passing gated run refreshes BENCH_serve.json BY DESIGN; a
+failed gate leaves it untouched.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import emit
+from repro.configs.registry import get_smoke_config
+from repro.kernels import ops as kops
+from repro.models import model as model_mod
+from repro.serve import serve_step as ss
+from repro.serve.engine import EngineConfig, Request, ServeEngine
+
+# committed baselines come from a different machine class; the gate only
+# catches collapses (4x), the correctness/speedup claims are exact
+GATE_RATIO = 0.25
+
+
+def _cfg():
+    return dataclasses.replace(get_smoke_config("qwen2-0.5b"),
+                               param_dtype="float32",
+                               compute_dtype="float32")
+
+
+def _prompts(n: int, plen: int, vocab: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, vocab, size=plen).astype(np.int32)
+            for _ in range(n)]
+
+
+def bench_throughput(params, cfg, *, n_req: int, plen: int, max_new: int):
+    """Sequential generate vs the batch-8 engine on identical requests."""
+    prompts = _prompts(n_req, plen, cfg.vocab_size)
+
+    t0 = time.time()
+    seq_tokens = 0
+    for p in prompts:
+        out = ss.generate(params, jnp.asarray(p)[None], cfg, max_new=max_new)
+        jax.block_until_ready(out)
+        seq_tokens += max_new
+    seq_s = time.time() - t0
+    seq_tps = seq_tokens / seq_s
+    emit("serve/sequential_tokens_per_s", seq_tps,
+         extra=f"{n_req} reqs one at a time, max_new={max_new}")
+
+    eng = ServeEngine(params, cfg, EngineConfig(
+        max_batch=8, block_size=16, num_blocks=64,
+        max_len=plen + max_new))
+    res = eng.run([Request(rid=i, prompt=p, max_new=max_new)
+                   for i, p in enumerate(prompts)])
+    eng_tps = res["generated"] / res["wall_s"]
+    emit("serve/engine_tokens_per_s_b8", eng_tps,
+         extra=f"{res['generated']} tokens in {res['slots']} slots")
+    speedup = eng_tps / seq_tps
+    emit("serve/speedup_vs_sequential", speedup)
+    emit("serve/speedup_ge_4x", int(speedup >= 4.0))
+    # both paths decode the same greedy tokens — a throughput win that
+    # changed the outputs would be a scheduler bug, not a speedup
+    ref0 = np.asarray(ss.generate(params, jnp.asarray(prompts[0])[None], cfg,
+                                  max_new=max_new))[0]
+    emit("serve/engine_tokens_match_generate",
+         int((np.asarray(res["outputs"][0]) == ref0).all()))
+    return prompts
+
+
+def bench_latency_vs_batch(params, cfg, prompts, *, max_new: int):
+    """p50/p99 request latency + TTFT as the engine widens."""
+    for bs in (1, 2, 4, 8):
+        eng = ServeEngine(params, cfg, EngineConfig(
+            max_batch=bs, block_size=16, num_blocks=64,
+            max_len=len(prompts[0]) + max_new))
+        res = eng.run([Request(rid=i, prompt=p, max_new=max_new)
+                       for i, p in enumerate(prompts)])
+        lat = np.array([r["latency_s"] for r in res["records"]])
+        ttft = np.array([r["ttft_s"] for r in res["records"]])
+        emit(f"serve/batch{bs}/tokens_per_s",
+             res["generated"] / res["wall_s"])
+        emit(f"serve/batch{bs}/p50_latency_s", float(np.percentile(lat, 50)))
+        emit(f"serve/batch{bs}/p99_latency_s", float(np.percentile(lat, 99)))
+        emit(f"serve/batch{bs}/p50_ttft_s", float(np.percentile(ttft, 50)))
+
+
+def bench_flash_decode_closeness(params, cfg):
+    """The Pallas flash-decode kernel vs the XLA gather+SDPA paged path on
+    a live engine cache (not synthetic pools): run the engine a few slots,
+    then decode the same query both ways."""
+    plen, max_new = 12, 8
+    prompts = _prompts(4, plen, cfg.vocab_size, seed=3)
+    eng = ServeEngine(params, cfg, EngineConfig(
+        max_batch=4, block_size=4, num_blocks=32, max_len=plen + max_new))
+    eng.submit([Request(rid=i, prompt=p, max_new=max_new)
+                for i, p in enumerate(prompts)])
+    eng._t0 = time.time()
+    for _ in range(4):                       # prefill + a few decode slots
+        eng.step()
+    pools = jax.tree.map(lambda z: z[0], eng.state["pos0"])  # super-block 0
+    tables = jnp.asarray(eng.tables)
+    lengths = jnp.asarray([ln.ctx_len + 1 for ln in eng.lanes], jnp.int32)
+    hd = cfg.resolved_head_dim
+    q = jax.random.normal(jax.random.PRNGKey(0),
+                          (4, cfg.n_heads, hd), jnp.float32)
+    kern = kops.flash_decode(q, pools["k_pool"], pools["v_pool"], tables,
+                             lengths)
+    from repro.kernels import ref
+    want = ref.flash_decode_ref(q, pools["k_pool"], pools["v_pool"], tables,
+                                lengths)
+    err = float(jnp.abs(kern - want).max())
+    emit("serve/flash_decode_max_err", err)
+    emit("serve/flash_decode_matches_xla", int(err <= 2e-5))
+    # timing: kernel runs interpreted off-TPU, so the XLA line is the
+    # meaningful wall-clock here (same convention as bench_kernels)
+    dense = jax.jit(lambda q_: ref.flash_decode_ref(
+        q_, pools["k_pool"], pools["v_pool"], tables, lengths))
+    dense(q)
+    t0 = time.time()
+    for _ in range(10):
+        out = dense(q)
+    jax.block_until_ready(out)
+    emit("serve/xla_paged_decode_us", (time.time() - t0) / 10 * 1e6)
+
+
+def check_gate(gate_ratio: float) -> int:
+    """Compare fresh numbers against the committed BENCH_serve.json."""
+    baseline = common.load_bench_json("serve")
+    fresh = common.bench_records("serve")
+    failures = []
+    if baseline:
+        for name, rec in baseline.items():
+            f = fresh.get(name)
+            if f is None:
+                failures.append(f"{name}: in committed BENCH_serve.json but "
+                                f"not measured by this run — regenerate the "
+                                f"baseline if the rename is intentional")
+                continue
+            if name.endswith("tokens_per_s") and \
+                    f["value"] < rec["value"] * gate_ratio:
+                failures.append(f"{name}: {f['value']:.1f} tok/s < committed "
+                                f"{rec['value']:.1f} * {gate_ratio}")
+            if (name.endswith("_us") or name.endswith("_s")) and \
+                    not name.endswith("tokens_per_s") and \
+                    f["value"] > rec["value"] / gate_ratio:
+                failures.append(f"{name}: {f['value']:.4f} > committed "
+                                f"{rec['value']:.4f} / {gate_ratio}")
+    for name, rec in fresh.items():
+        if ("matches" in name or "_ge_" in name) and not rec["value"]:
+            failures.append(f"{name}: claim failed on this run")
+    for f in failures:
+        print(f"GATE FAIL {f}", flush=True)
+    return 1 if failures else 0
+
+
+def main(full: bool = False, smoke: bool = False, gate: bool = False,
+         gate_ratio: float = GATE_RATIO) -> int:
+    common.begin_bench("serve")
+    cfg = _cfg()
+    params = model_mod.init_model(jax.random.PRNGKey(0), cfg)
+    n_req, plen, max_new = (16, 16, 48) if full else (8, 12, 24)
+    t0 = time.time()
+    prompts = bench_throughput(params, cfg, n_req=n_req, plen=plen,
+                               max_new=max_new)
+    bench_latency_vs_batch(params, cfg, prompts, max_new=max_new)
+    bench_flash_decode_closeness(params, cfg)
+    emit("serve/total_bench_s", time.time() - t0)
+    common.end_bench("serve")
+    rc = check_gate(gate_ratio) if gate else 0
+    if rc:
+        print("GATE FAIL: BENCH_serve.json left untouched", flush=True)
+        return rc
+    common.write_bench_json("serve", common.bench_records("serve"))
+    return rc
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="more requests / longer generations")
+    ap.add_argument("--smoke", action="store_true",
+                    help="nightly-CI scale (the default is already "
+                         "smoke-sized; flag kept for CLI symmetry)")
+    ap.add_argument("--gate", action="store_true",
+                    help="fail on regression vs the committed "
+                         "BENCH_serve.json / correctness+speedup claims")
+    ap.add_argument("--gate-ratio", type=float, default=GATE_RATIO)
+    args = ap.parse_args()
+    raise SystemExit(main(full=args.full, smoke=args.smoke, gate=args.gate,
+                          gate_ratio=args.gate_ratio))

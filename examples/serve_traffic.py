@@ -1,0 +1,116 @@
+"""Serving-traffic example: train -> checkpoint -> continuous batching.
+
+Trains a reduced model with production MLL-SGD (checkpointing the run),
+boots a `ServeEngine` STRAIGHT FROM THE CHECKPOINT DIRECTORY (the engine
+rebuilds the network from the recorded plan_config and recomputes the
+merged u_k = X a), then replays a Poisson request stream through the paged
+KV cache and reports tokens/sec + latency percentiles.
+
+Serve a real `train_100m` run:
+
+  PYTHONPATH=src python examples/train_100m.py --checkpoint-dir /tmp/ck100
+  PYTHONPATH=src python examples/serve_traffic.py --checkpoint-dir /tmp/ck100 \
+      --arch 25m
+
+or without arguments it trains (and checkpoints) a smoke model first:
+
+  PYTHONPATH=src python examples/serve_traffic.py [--requests 12]
+      [--rate 0.5] [--max-batch 4] [--impl xla|flash|pallas]
+"""
+import argparse
+import dataclasses
+import tempfile
+
+import numpy as np
+
+from repro.configs.registry import get_config, get_smoke_config
+from repro.core.mllsgd import MLLConfig
+from repro.launch.train import TrainLoopConfig, run_training
+from repro.serve.engine import EngineConfig, ServeEngine, poisson_arrivals
+
+
+def serve_config(arch: str):
+    """The ArchConfig the checkpoint was trained under (the `25m`/`100m`
+    entries mirror examples/train_100m.py's build_config exactly — the
+    restore validates treedef+dtype, so they must match)."""
+    if arch == "smoke":
+        return dataclasses.replace(get_smoke_config("qwen2-0.5b"),
+                                   param_dtype="float32",
+                                   compute_dtype="float32")
+    base = get_config("qwen3-1.7b")
+    if arch == "100m":
+        return dataclasses.replace(
+            base, name="mll-100m", num_layers=8, d_model=640, n_heads=10,
+            n_kv_heads=5, head_dim=64, d_ff=2560, vocab_size=32768,
+            param_dtype="float32", compute_dtype="float32")
+    return dataclasses.replace(
+        base, name="mll-25m", num_layers=4, d_model=384, n_heads=6,
+        n_kv_heads=3, head_dim=64, d_ff=1536, vocab_size=16384,
+        param_dtype="float32", compute_dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="Poisson arrival rate (requests per engine slot)")
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--impl", default="xla",
+                    choices=("xla", "flash", "pallas"),
+                    help="paged decode through XLA gather+SDPA or the "
+                         "Pallas flash-decode kernel (interpret off-TPU)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="serve an existing harness checkpoint (e.g. from "
+                         "examples/train_100m.py --checkpoint-dir) instead "
+                         "of training a fresh smoke model")
+    ap.add_argument("--arch", default="smoke",
+                    choices=("smoke", "25m", "100m"),
+                    help="config the checkpoint was trained under "
+                         "(train_100m.py default is 25m)")
+    args = ap.parse_args()
+
+    cfg = serve_config(args.arch)
+    ckdir = args.checkpoint_dir
+    if ckdir is None:
+        ckdir = tempfile.mkdtemp(prefix="mll-serve-ck-")
+        mll = MLLConfig(tau=4, q=2, eta=0.1, hub_topology="complete")
+        loop = TrainLoopConfig(steps=16, eval_every=8, seq_len=48,
+                               batch_per_worker=4, tokens_per_worker=8192,
+                               checkpoint_dir=ckdir, checkpoint_every=16)
+        print("training a reduced qwen2-0.5b with MLL-SGD "
+              "(2 subnets x 2 workers, checkpointed)...")
+        run_training(cfg, mll, loop, num_subnets=2, workers_per_subnet=2,
+                     log=lambda *a, **k: None)
+    print(f"booting engine from checkpoint {ckdir} (impl={args.impl})")
+    eng = ServeEngine.from_checkpoint(
+        ckdir, cfg, EngineConfig(max_batch=args.max_batch, block_size=8,
+                                 num_blocks=96, max_len=64,
+                                 impl=args.impl))
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size,
+                            size=int(rng.integers(6, 14))).astype(np.int32)
+               for _ in range(args.requests)]
+    reqs = poisson_arrivals(prompts, max_new=args.max_new, rate=args.rate,
+                            seed=1)
+    print(f"replaying {len(reqs)} requests (Poisson rate {args.rate}/slot, "
+          f"arrivals over {reqs[-1].arrival} slots)...")
+    res = eng.run(reqs)
+
+    lat = np.array([r["latency_s"] for r in res["records"]])
+    ttft = np.array([r["ttft_s"] for r in res["records"]])
+    trace = eng.trace(example="serve_traffic")
+    print(f"served {len(res['outputs'])} requests / {res['generated']} "
+          f"tokens in {res['slots']} slots ({res['wall_s']:.2f}s)")
+    print(f"  throughput : {res['generated'] / res['wall_s']:8.1f} tokens/s")
+    print(f"  TTFT   p50 : {np.percentile(ttft, 50):8.3f}s")
+    print(f"  latency p50: {np.percentile(lat, 50):8.3f}s")
+    print(f"  latency p99: {np.percentile(lat, 99):8.3f}s")
+    print(f"  lane occupancy: {np.mean(trace['busy_slots']):.2f}/"
+          f"{args.max_batch} busy per slot, "
+          f"{trace['slots_used']}/{trace['slots']} slots used")
+
+
+if __name__ == "__main__":
+    main()

@@ -44,6 +44,10 @@ def main():
     ap.add_argument("--q", type=int, default=4)
     ap.add_argument("--policy", default="deadline",
                     choices=available_policies())
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="write the full-protocol checkpoint here (the "
+                         "averaged u_k lands at the dir root — "
+                         "examples/serve_traffic.py serves it directly)")
     ap.add_argument("--impl", default="xla",
                     choices=("xla", "flash", "pallas"),
                     help="'flash'/'pallas' train through the native Pallas "
@@ -59,7 +63,8 @@ def main():
     loop = TrainLoopConfig(steps=args.steps, eval_every=args.tau * args.q,
                            seq_len=128, batch_per_worker=4,
                            tokens_per_worker=1 << 16, policy=args.policy,
-                           impl=args.impl)
+                           impl=args.impl,
+                           checkpoint_dir=args.checkpoint_dir)
     out = run_training(cfg, mll, loop, num_subnets=2, workers_per_subnet=2)
     hist = out["history"]
     plan = out["plan"]
@@ -68,6 +73,11 @@ def main():
           f"(drop {drop:.3f}) over {args.steps} slots "
           f"({plan.rounds_completed} {args.policy} rounds, "
           f"{int(plan.idle_slots.sum())} idle worker-slots)")
+    if args.checkpoint_dir:
+        arch = "100m" if args.full_100m else "25m"
+        print(f"checkpoint written to {args.checkpoint_dir} — serve it with "
+              f"examples/serve_traffic.py --checkpoint-dir "
+              f"{args.checkpoint_dir} --arch {arch}")
     assert drop > 0, "training must reduce the averaged model's loss"
 
 

@@ -210,6 +210,174 @@ def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                                    block_kv=block_kv, interpret=interpret)[0]
 
 
+# ------------------------------------------------------------ flash decode
+def _decode_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref,
+                   o_ref, m_ref, l_ref, acc_ref, mx_ref, lx_ref, *,
+                   scale: float, window: int, softcap: float,
+                   block_kv: int, blocks_per_split: int, group: int):
+    """Single-query attention over a paged KV cache, one (batch, kv-head,
+    split) program sequence per scratch lifetime.
+
+    Grid: (B, Hkv, num_splits, blocks_per_split); the block axis is the
+    minormost "arbitrary" dimension, accumulating the online softmax in VMEM
+    scratch.  The k/v tiles arrive through the BLOCK-TABLE indirection: the
+    in_specs' index maps read the scalar-prefetched ``tbl_ref`` so each grid
+    step DMAs exactly the physical block the logical position maps to.  The
+    whole GQA group's queries ride in one (group, hd) tile, so each fetched
+    KV block is reused ``group`` times.
+
+    Outputs are per-split partials — UNNORMALIZED accumulator plus the
+    (m, l) softmax state — combined across splits by the wrapper's
+    logsumexp epilogue (flash-decoding split-KV reduction).
+    """
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+    j = pl.program_id(3)
+    nj = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        mx_ref[...] = jnp.full_like(mx_ref, NEG_INF)
+        lx_ref[...] = jnp.zeros_like(lx_ref)
+
+    length = len_ref[b]                   # tokens in cache incl. the current
+    qpos = length - 1                     # the query's absolute position
+    start = (s * blocks_per_split + j) * block_kv
+    live = start < length                 # block holds any live position
+    if window > 0:                        # entirely left of the window?
+        live &= start + block_kv - 1 >= qpos - window + 1
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0, :, :].astype(jnp.float32) * scale    # (group, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bkv, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        sc = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
+        if softcap > 0:
+            sc = softcap * jnp.tanh(sc / softcap)
+        kpos = start + jax.lax.broadcasted_iota(
+            jnp.int32, (group, block_kv), 1)
+        mask = kpos < length              # causal: everything cached is past
+        if window > 0:
+            mask &= (qpos - kpos) < window
+        sc = jnp.where(mask, sc, NEG_INF)
+
+        m_prev = mx_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(sc, axis=1))
+        p = jnp.where(mask, jnp.exp(sc - m_new[:, None]), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        lx_ref[:, 0] = alpha * lx_ref[:, 0] + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        mx_ref[:, 0] = m_new
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        o_ref[0, 0, 0, :, :] = acc_ref[...]
+        m_ref[0, 0, 0, :] = mx_ref[:, 0]
+        l_ref[0, 0, 0, :] = lx_ref[:, 0]
+
+
+def flash_decode_paged(q: jnp.ndarray, k_pool: jnp.ndarray,
+                       v_pool: jnp.ndarray, block_tables: jnp.ndarray,
+                       lengths: jnp.ndarray, *, window: int = 0,
+                       softcap: float = 0.0, num_splits: int = 0,
+                       interpret: bool = False) -> jnp.ndarray:
+    """Flash-decode: one query token per sequence against a paged KV cache.
+
+    q: (B, H, hd) — the new token's queries.
+    k_pool/v_pool: (num_blocks, block_size, Hkv, hd) — the shared block pool.
+    block_tables: (B, max_blocks) int32 — physical block of each logical
+        block (rows padded with any valid block id; padded entries are
+        masked out by ``lengths``).
+    lengths: (B,) int32 — tokens in the cache INCLUDING the one being
+        decoded (the query sits at absolute position ``lengths - 1``);
+        0 marks an inactive lane (output is all zeros).
+    -> (B, H, hd), same dtype as q.
+
+    Split-KV: the logical block axis is divided into ``num_splits``
+    independent grid lanes, each producing an unnormalized partial
+    (acc, m, l); the wrapper combines them with a logsumexp weighting —
+    exact, order-independent.  GQA: each kv head serves its whole q-head
+    group from one fetched block.
+    """
+    bsz, h, hd = q.shape
+    nb, bs, hkv, _ = k_pool.shape
+    group = h // hkv
+    hd_p = _pad_head_dim(hd)
+    if hd_p != hd:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, hd_p - hd)))
+        k_pool = jnp.pad(k_pool, ((0, 0), (0, 0), (0, 0), (0, hd_p - hd)))
+        v_pool = jnp.pad(v_pool, ((0, 0), (0, 0), (0, 0), (0, hd_p - hd)))
+    nmax = block_tables.shape[1]
+    if num_splits <= 0:                       # enough lanes to matter, but
+        num_splits = min(8, nmax)             # never empty splits
+    num_splits = max(1, min(num_splits, nmax))
+    bps = -(-nmax // num_splits)              # blocks per split (ceil)
+    pad_blocks = num_splits * bps - nmax
+    if pad_blocks:                            # padded entries point at block
+        block_tables = jnp.pad(block_tables,  # 0 (valid memory, masked out)
+                               ((0, 0), (0, pad_blocks)))
+    qg = q.reshape(bsz, hkv, group, hd_p)     # head h = kv*group + g
+
+    kernel = functools.partial(
+        _decode_kernel, scale=1.0 / np.sqrt(hd), window=window,
+        softcap=softcap, block_kv=bs, blocks_per_split=bps, group=group)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bsz, hkv, num_splits, bps),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, hd_p),
+                         lambda b, h_, s, j, tbl, lens: (b, h_, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd_p),
+                         lambda b, h_, s, j, tbl, lens:
+                         (tbl[b, s * bps + j], 0, h_, 0)),
+            pl.BlockSpec((1, bs, 1, hd_p),
+                         lambda b, h_, s, j, tbl, lens:
+                         (tbl[b, s * bps + j], 0, h_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, group, hd_p),
+                         lambda b, h_, s, j, tbl, lens: (b, h_, s, 0, 0)),
+            pl.BlockSpec((1, 1, 1, group),
+                         lambda b, h_, s, j, tbl, lens: (b, h_, s, 0)),
+            pl.BlockSpec((1, 1, 1, group),
+                         lambda b, h_, s, j, tbl, lens: (b, h_, s, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((group, hd_p), jnp.float32),   # unnormalized acc
+            pltpu.VMEM((group, 1), jnp.float32),      # running max m
+            pltpu.VMEM((group, 1), jnp.float32),      # normalizer l
+        ],
+    )
+    o_parts, m_parts, l_parts = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, hkv, num_splits, group, hd_p),
+                                 jnp.float32),
+            jax.ShapeDtypeStruct((bsz, hkv, num_splits, group), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, hkv, num_splits, group), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      qg, k_pool, v_pool)
+
+    # split combine: exact logsumexp reduction over the split axis.  Dead
+    # splits carry (m=NEG_INF, l=0) and contribute exactly zero; a fully
+    # dead row (lengths == 0) is guarded to zeros.
+    m = jnp.max(m_parts, axis=2)                              # (B, Hkv, G)
+    w = jnp.exp(m_parts - m[:, :, None])                      # (B, Hkv, S, G)
+    acc = jnp.einsum("bhsg,bhsgd->bhgd", w, o_parts)
+    l = jnp.sum(w * l_parts, axis=2)
+    out = acc / jnp.where(l == 0.0, 1.0, l)[..., None]
+    return out.reshape(bsz, h, hd_p)[..., :hd].astype(q.dtype)
+
+
 # ----------------------------------------------------------------- backward
 def _recompute_p_ds(q, k, v, do, lse_row, delta_row, mask, *,
                     softcap: float):

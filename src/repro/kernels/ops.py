@@ -54,6 +54,19 @@ def _fa_bwd(causal, window, softcap, res, dout):
 flash_attention.defvjp(_fa_fwd, _fa_bwd)
 
 
+def flash_decode(q, k_pool, v_pool, block_tables, lengths, *,
+                 window: int = 0, softcap: float = 0.0, num_splits: int = 0):
+    """Single-query (decode) attention over a paged KV cache: the serving
+    analogue of `flash_attention`.  q: (B, H, hd) against a
+    (num_blocks, block_size, Hkv, hd) pool through a (B, max_blocks) block
+    table, split-KV grid with per-split logsumexp combine.  Inference-only
+    (no VJP) — decode never differentiates."""
+    return fa_mod.flash_decode_paged(
+        q, k_pool, v_pool, block_tables, lengths, window=window,
+        softcap=softcap, num_splits=num_splits,
+        interpret=_interpret_default())
+
+
 # ------------------------------------------------------------------ hier mix
 def hier_mix(x, g, t_op, theta, eta: float, *, block_c: int = 512):
     """Fused gated-SGD + averaging for one (W, C) leaf."""

@@ -35,6 +35,40 @@ def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     return out.reshape(b, t, h, hd)
 
 
+def flash_decode_ref(q: jnp.ndarray, k_pool: jnp.ndarray,
+                     v_pool: jnp.ndarray, block_tables: jnp.ndarray,
+                     lengths: jnp.ndarray, *, window: int = 0,
+                     softcap: float = 0.0) -> jnp.ndarray:
+    """Paged single-query attention oracle (gather + dense softmax).
+
+    q: (B, H, hd); k_pool/v_pool: (num_blocks, block_size, Hkv, hd);
+    block_tables: (B, max_blocks) int32; lengths: (B,) int32 — tokens in
+    cache including the one being decoded (query position = lengths - 1).
+    Rows with lengths == 0 return zeros.  -> (B, H, hd)."""
+    b, h, hd = q.shape
+    nb, bs, hkv, _ = k_pool.shape
+    group = h // hkv
+    nmax = block_tables.shape[1]
+    s = nmax * bs
+    k = k_pool[block_tables].reshape(b, s, hkv, hd)   # (B, S, Hkv, hd)
+    v = v_pool[block_tables].reshape(b, s, hkv, hd)
+    qg = q.reshape(b, hkv, group, hd)
+    logits = jnp.einsum("bhgk,bshk->bhgs", qg, k).astype(jnp.float32)
+    logits = logits / np.sqrt(hd)
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    kpos = jnp.arange(s, dtype=jnp.int32)[None, :]    # logical positions
+    qpos = (lengths - 1)[:, None]
+    mask = kpos < lengths[:, None]
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    logits = jnp.where(mask[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(lengths[:, None, None, None] > 0, probs, 0.0)
+    out = jnp.einsum("bhgs,bshk->bhgk", probs, v.astype(jnp.float32))
+    return out.reshape(b, h, hd).astype(q.dtype)
+
+
 def hier_mix_ref(x: jnp.ndarray, g: jnp.ndarray, t_op: jnp.ndarray,
                  theta: jnp.ndarray, eta: float) -> jnp.ndarray:
     """Fused gated-SGD + averaging operator (paper Eq. 5, one leaf):

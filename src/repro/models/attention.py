@@ -133,6 +133,15 @@ def _sdpa_chunked(q, k, v, cfg: ArchConfig, *, block_q: int = 512) -> jnp.ndarra
 def attention_train(params: PyTree, x: jnp.ndarray, cfg: ArchConfig,
                     positions: jnp.ndarray, impl: str = "xla") -> jnp.ndarray:
     """Full-sequence causal attention (training / prefill)."""
+    return attention_prefill(params, x, cfg, positions, impl)[0]
+
+
+def attention_prefill(params: PyTree, x: jnp.ndarray, cfg: ArchConfig,
+                      positions: jnp.ndarray, impl: str = "xla"
+                      ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full-sequence causal attention that ALSO hands back the projected
+    (post-RoPE) k/v so a serving prefill can fill its KV cache from the
+    same batched forward pass.  -> (y (B,S,d), k, v (B,S,Hkv,hd))."""
     b, s, _ = x.shape
     q, k, v = _project_qkv(params, x, cfg, positions)
     if impl in ("flash", "pallas"):
@@ -147,7 +156,7 @@ def attention_train(params: PyTree, x: jnp.ndarray, cfg: ArchConfig,
         out = _sdpa(q, k, v, cfg, mask)
     out = constraint(out, "act_batch", "mixer_seq", "heads", None)
     cdt = jnp.dtype(cfg.compute_dtype)
-    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(cdt))
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(cdt)), k, v
 
 
 # ------------------------------------------------------------------ KV cache
@@ -196,3 +205,69 @@ def attention_decode(params: PyTree, x: jnp.ndarray, cfg: ArchConfig,
     cdt = jnp.dtype(cfg.compute_dtype)
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(cdt))
     return y, {"k": ck, "v": cv, "pos": cpos}
+
+
+def fill_cache_from_prefill(cache: PyTree, k: jnp.ndarray, v: jnp.ndarray,
+                            cfg: ArchConfig) -> PyTree:
+    """Fill a rotating-buffer decode cache from a batched prefill's k/v.
+
+    k/v: (B, S, Hkv, hd) — the projected prompt keys/values for absolute
+    positions 0..S-1.  Writes land exactly where S sequential
+    `attention_decode` steps would have put them (slot = pos % buf; only
+    the last ``buf`` positions survive a sliding-window rotation)."""
+    s = k.shape[1]
+    buf = cache["k"].shape[1]
+    m = min(s, buf)
+    pos = jnp.arange(s - m, s, dtype=jnp.int32)
+    slots = pos % buf
+    ck = cache["k"].at[:, slots].set(k[:, s - m:].astype(cache["k"].dtype))
+    cv = cache["v"].at[:, slots].set(v[:, s - m:].astype(cache["v"].dtype))
+    cpos = cache["pos"].at[:, slots].set(
+        jnp.broadcast_to(pos[None], (cache["pos"].shape[0], m)))
+    return {"k": ck, "v": cv, "pos": cpos}
+
+
+# -------------------------------------------------------- paged decode
+def attention_paged_decode(params: PyTree, x: jnp.ndarray, cfg: ArchConfig,
+                           pools: PyTree, block_tables: jnp.ndarray,
+                           lengths: jnp.ndarray, impl: str = "xla"
+                           ) -> tuple[jnp.ndarray, PyTree]:
+    """One-token decode against the paged block pool.
+
+    x: (B, 1, d); pools: {"k_pool", "v_pool"} (num_blocks, bs, Hkv, hd);
+    block_tables: (B, max_blocks) int32; lengths: (B,) int32 — context
+    length INCLUDING the token being decoded (it sits at position
+    ``lengths - 1``; 0 marks an inactive lane, whose write is dropped and
+    whose output is garbage the engine ignores).
+
+    ``impl="flash"|"pallas"`` reads through the Pallas flash-decode kernel
+    (split-KV + block-table indirection); ``"xla"`` gathers the table into
+    a dense view and reuses `_sdpa` — the parity oracle.
+    """
+    from repro.serve import kv_cache as kvc
+
+    b = x.shape[0]
+    positions = rope_mod.default_positions(
+        cfg, b, 1, offset=jnp.maximum(lengths - 1, 0)[:, None])
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    kp, vp = kvc.write_token_kv(pools["k_pool"], pools["v_pool"],
+                                k[:, 0], v[:, 0], block_tables, lengths - 1)
+    if impl in ("flash", "pallas"):
+        from repro.kernels import ops as kops
+        out = kops.flash_decode(q[:, 0], kp, vp, block_tables, lengths,
+                                window=cfg.sliding_window,
+                                softcap=cfg.logit_softcap)[:, None]
+    elif impl == "xla":
+        ck = kvc.gather_kv(kp, block_tables)
+        cv = kvc.gather_kv(vp, block_tables)
+        s = ck.shape[1]
+        kpos = jnp.arange(s, dtype=jnp.int32)[None, :]
+        mask = kpos < lengths[:, None]
+        if cfg.sliding_window:
+            mask &= ((lengths - 1)[:, None] - kpos) < cfg.sliding_window
+        out = _sdpa(q, ck, cv, cfg, mask[:, None, :])
+    else:
+        raise ValueError(f"unknown impl {impl!r} (xla | flash | pallas)")
+    cdt = jnp.dtype(cfg.compute_dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(cdt))
+    return y, {"k_pool": kp, "v_pool": vp}

@@ -64,6 +64,47 @@ def forward_train(params: PyTree, batch: dict, cfg: ArchConfig, *,
     return lm_logits(params["embed"], x, cfg), aux
 
 
+def prefill_forward(params: PyTree, batch: dict, cfg: ArchConfig, *,
+                    impl: str = "xla") -> tuple[jnp.ndarray, PyTree]:
+    """Batched serving prefill: one training-path forward over the prompt
+    that also returns every layer's projected k/v for cache filling.
+
+    -> (logits (B, S, vocab), {"pos{i}": (k, v)}) with k/v leaves
+    (n_sb, B, S, Hkv, hd).  Attention-only patterns; tokens input mode."""
+    if cfg.input_mode != "tokens":
+        raise NotImplementedError(
+            f"prefill_forward requires input_mode='tokens', got {cfg.input_mode}")
+    x = _input_embeds(params, batch, cfg)
+    b, s, _ = x.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = rope_mod.default_positions(cfg, b, s)
+    x, kv_stacked = tf.stack_prefill(params["blocks"], x, cfg, positions,
+                                     impl=impl)
+    x = norm_apply(params["final_norm"], x, cfg)
+    return lm_logits(params["embed"], x, cfg), kv_stacked
+
+
+def init_paged_state(cfg: ArchConfig, num_blocks: int,
+                     block_size: int) -> PyTree:
+    """Stacked per-layer paged block pools (serving decode state)."""
+    return tf.init_stacked_paged_state(cfg, num_blocks, block_size)
+
+
+def paged_decode_step(params: PyTree, state: PyTree, batch: dict,
+                      block_tables: jnp.ndarray, lengths: jnp.ndarray,
+                      cfg: ArchConfig, *, impl: str = "xla"
+                      ) -> tuple[jnp.ndarray, PyTree]:
+    """One-token decode against the paged cache.  batch: {"tokens": (B,1)};
+    lengths: (B,) context length including this token (0 = inactive lane).
+    -> (logits (B,1,V), new state)."""
+    x = embed_tokens(params["embed"], batch["tokens"], cfg)
+    x, new_state = tf.stack_paged_decode(params["blocks"], state, x, cfg,
+                                         block_tables, lengths, impl=impl)
+    x = norm_apply(params["final_norm"], x, cfg)
+    return lm_logits(params["embed"], x, cfg), new_state
+
+
 def init_decode_state(cfg: ArchConfig, batch: int, max_len: int) -> PyTree:
     return tf.init_stacked_state(cfg, batch, max_len)
 

@@ -111,6 +111,111 @@ def stack_train(stacked: PyTree, x: jnp.ndarray, cfg: ArchConfig,
     return x, aux
 
 
+# ------------------------------------------------------------------ prefill
+def _require_attn_only(cfg: ArchConfig, what: str) -> None:
+    if any(kind != "attn" for kind in cfg.pattern):
+        raise NotImplementedError(
+            f"{what} supports attention-only patterns; {cfg.name} has "
+            f"pattern {cfg.pattern} (recurrent blocks would need their "
+            "final state threaded out of the batched forward)")
+
+
+def super_block_prefill(params: PyTree, x: jnp.ndarray, cfg: ArchConfig,
+                        positions: jnp.ndarray, impl: str = "xla"
+                        ) -> tuple[jnp.ndarray, PyTree]:
+    """Training-path math over the whole prompt, additionally capturing
+    each attention position's projected k/v (the serving prefill).
+    -> (y, {"pos{i}": (k, v)})."""
+    kvs = {}
+    for pos, kind in enumerate(cfg.pattern):
+        b = params[f"pos{pos}"]
+        h = norm_apply(b["norm1"], x, cfg)
+        mixed, k, v = attn_mod.attention_prefill(b["mixer"], h, cfg,
+                                                 positions, impl)
+        kvs[f"pos{pos}"] = (k, v)
+        x = x + mixed
+        if _has_ffn(cfg, kind, pos):
+            h = norm_apply(b["norm2"], x, cfg)
+            if _position_uses_moe(cfg, pos):
+                y, _ = moe_mod.moe_apply(b["ffn"], h, cfg)
+            else:
+                y = mlp_apply(b["ffn"], h, cfg)
+            x = x + y
+    return x, kvs
+
+
+def stack_prefill(stacked: PyTree, x: jnp.ndarray, cfg: ArchConfig,
+                  positions: jnp.ndarray, *, impl: str = "xla"
+                  ) -> tuple[jnp.ndarray, PyTree]:
+    """One batched forward over the prompt, returning the final hidden
+    states AND every layer's k/v stacked on the super-block axis:
+    {"pos{i}": (k, v)} with leaves (n_sb, B, S, Hkv, hd).  The caller owns
+    the cache layout (rotating dense buffer or paged block pool)."""
+    _require_attn_only(cfg, "stack_prefill")
+
+    def body(x, blk_params):
+        y, kvs = super_block_prefill(blk_params, x, cfg, positions, impl)
+        return y, kvs
+
+    x, kv_stacked = jax.lax.scan(body, x, stacked)
+    return x, kv_stacked
+
+
+# -------------------------------------------------------------- paged decode
+def init_stacked_paged_state(cfg: ArchConfig, num_blocks: int,
+                             block_size: int) -> PyTree:
+    """Per-layer paged block pools, stacked on the super-block axis:
+    {"pos{i}": {"k_pool", "v_pool"}} with leaves
+    (n_sb, num_blocks, block_size, Hkv, hd)."""
+    from repro.serve import kv_cache as kvc
+
+    _require_attn_only(cfg, "paged decode")
+    pc = kvc.PagedCacheConfig(block_size=block_size, num_blocks=num_blocks,
+                              max_len=block_size)  # geometry only
+    one = {f"pos{pos}": kvc.init_layer_pools(
+        pc, cfg.n_kv_heads, cfg.resolved_head_dim,
+        jnp.dtype(cfg.compute_dtype)) for pos in range(len(cfg.pattern))}
+    n = cfg.num_super_blocks
+    return jax.tree.map(lambda z: jnp.broadcast_to(z[None], (n,) + z.shape),
+                        one)
+
+
+def super_block_paged_decode(params: PyTree, x: jnp.ndarray, cfg: ArchConfig,
+                             state: PyTree, block_tables: jnp.ndarray,
+                             lengths: jnp.ndarray, impl: str = "xla"
+                             ) -> tuple[jnp.ndarray, PyTree]:
+    new_state = {}
+    for pos, kind in enumerate(cfg.pattern):
+        b, s = params[f"pos{pos}"], state[f"pos{pos}"]
+        h = norm_apply(b["norm1"], x, cfg)
+        mixed, ns = attn_mod.attention_paged_decode(
+            b["mixer"], h, cfg, s, block_tables, lengths, impl)
+        new_state[f"pos{pos}"] = ns
+        x = x + mixed
+        if _has_ffn(cfg, kind, pos):
+            h = norm_apply(b["norm2"], x, cfg)
+            if _position_uses_moe(cfg, pos):
+                y, _ = moe_mod.moe_apply(b["ffn"], h, cfg)
+            else:
+                y = mlp_apply(b["ffn"], h, cfg)
+            x = x + y
+    return x, new_state
+
+
+def stack_paged_decode(stacked: PyTree, stacked_state: PyTree,
+                       x: jnp.ndarray, cfg: ArchConfig,
+                       block_tables: jnp.ndarray, lengths: jnp.ndarray, *,
+                       impl: str = "xla") -> tuple[jnp.ndarray, PyTree]:
+    def body(x, blk):
+        blk_params, blk_state = blk
+        y, ns = super_block_paged_decode(blk_params, x, cfg, blk_state,
+                                         block_tables, lengths, impl)
+        return y, ns
+
+    x, new_states = jax.lax.scan(body, x, (stacked, stacked_state))
+    return x, new_states
+
+
 # ------------------------------------------------------------------- decode
 def init_super_block_state(cfg: ArchConfig, batch: int, max_len: int) -> PyTree:
     st = {}

@@ -1,0 +1,369 @@
+"""Continuous-batching serving engine over the paged KV cache.
+
+The engine serves the *merged* model u_k (the weighted average the
+hierarchy trains — hubs are stateless, so u_k is what a deployment runs;
+`load_u_k` pulls it out of a harness checkpoint).  One `ServeEngine` owns
+``max_batch`` decode lanes, a shared pool of KV blocks, and a FIFO queue:
+
+  * **admission** — a queued request is admitted when a lane is free AND
+    its full worst-case block budget fits (all-or-nothing, so decode can
+    never run out of cache mid-request);
+  * **prefill** — newly admitted lanes run ONE batched forward over their
+    prompts (`model.prefill_forward`), the captured k/v is scattered into
+    the block pools, and the first token is sampled from the last prompt
+    position's logits;
+  * **decode** — every active lane advances one token per slot through
+    `model.paged_decode_step` (XLA gather oracle or the Pallas
+    flash-decode kernel, per ``impl``);
+  * **eviction** — a finished request frees its blocks immediately; the
+    next admission reuses them (LIFO), which is what lets a long-running
+    engine serve an unbounded request stream from a fixed pool.
+
+Each engine step is one SLOT of the same event-trace clock the training
+timeline uses; `ServeEngine.trace` emits the shared
+``mll-timeline-trace/v1`` document (busy/idle lanes per slot, one round
+per request, per-request latency records under ``meta.requests``) so the
+benchmark gate reads serving traces with the training tooling.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import protocol, timeline
+from repro.core.mllsgd import MLLConfig, build_network
+from repro.core.simulator import weighted_average
+from repro.models import model as model_mod
+from repro.serve import kv_cache as kvc
+from repro.train import checkpoint
+
+PyTree = Any
+
+
+# ------------------------------------------------------------------ requests
+@dataclasses.dataclass
+class Request:
+    """One generation request.  ``arrival`` is the slot index at which the
+    request becomes visible to the scheduler (0 = available at start)."""
+    rid: int
+    prompt: np.ndarray            # (plen,) int32 token ids
+    max_new: int = 16
+    arrival: int = 0
+
+
+def poisson_arrivals(prompts: list[np.ndarray], *, max_new: int = 16,
+                     rate: float = 1.0, seed: int = 0) -> list[Request]:
+    """Requests with Poisson arrivals: exponential inter-arrival slots at
+    ``rate`` requests/slot, cumulative and floored onto the slot clock."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, size=len(prompts))
+    arrivals = np.floor(np.cumsum(gaps)).astype(int)
+    return [Request(rid=i, prompt=np.asarray(p, np.int32),
+                    max_new=max_new, arrival=int(a))
+            for i, (p, a) in enumerate(zip(prompts, arrivals))]
+
+
+# ---------------------------------------------------------------- u_k loader
+def load_u_k(path: str, cfg: ArchConfig) -> PyTree:
+    """The averaged model u_k from a harness checkpoint directory.
+
+    Preferred source is the FULL protocol checkpoint (`restore_state`):
+    the manifest's ``plan_config`` rebuilds the MLLConfig + network the
+    run trained under, the per-worker params are restored into that
+    skeleton, and u_k = X a is recomputed with the network's averaging
+    weights — byte-identical to what the harness served at that slot.
+    Falls back to the legacy root params checkpoint (`restore`) for dirs
+    written without ``save_state``.
+    """
+    skeleton = model_mod.init_model(jax.random.PRNGKey(0), cfg)
+    state_manifest = os.path.join(checkpoint.state_dir(path), "manifest.json")
+    if not os.path.exists(state_manifest):
+        u, _ = checkpoint.restore(path, skeleton)
+        return u
+    extra = checkpoint.load_manifest(checkpoint.state_dir(path)).get("extra", {})
+    pcfg = extra.get("plan_config")
+    if pcfg is None:
+        raise ValueError(
+            f"{path}: full-protocol checkpoint carries no plan_config — "
+            "cannot rebuild the network's averaging weights")
+    mll = MLLConfig(
+        tau=int(pcfg["tau"]), q=int(pcfg["q"]), eta=float(pcfg["eta"]),
+        granularity="worker_per_data", hub_topology=pcfg["hub_topology"],
+        worker_rates=tuple(float(r) for r in pcfg["worker_rates"]),
+        mixing=pcfg["mixing"], mix_dtype=pcfg["mix_dtype"],
+        inner_opt=pcfg["inner_opt"],
+        inner_opt_args=tuple(tuple(kv) for kv in pcfg["inner_opt_args"]),
+        seed=int(pcfg["seed"]))
+    wps = [int(n) for n in pcfg["workers_per_subnet"]]
+    network = build_network(mll, len(wps), wps[0])
+    w = network.num_workers
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (w,) + x.shape), skeleton)
+    like = protocol.init_train_state(stacked, cfg=mll)
+    train_state, _, _ = checkpoint.restore_state(path, like)
+    return weighted_average(train_state.params,
+                            jnp.asarray(network.a, jnp.float32))
+
+
+# ------------------------------------------------------------------- engine
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_batch: int = 8            # decode lanes
+    block_size: int = 16
+    num_blocks: int = 128
+    max_len: int = 256            # per-request context cap (prompt + new)
+    temperature: float = 0.0
+    seed: int = 0
+    impl: str = "xla"             # xla | flash | pallas
+
+
+@dataclasses.dataclass
+class _Lane:
+    rid: int
+    blocks: list[int]
+    ctx_len: int                  # tokens currently in cache
+    budget: int                   # hard context cap for this request
+    max_new: int
+    produced: int = 0
+    tokens: list[int] = dataclasses.field(default_factory=list)
+    record: dict = dataclasses.field(default_factory=dict)
+
+
+class ServeEngine:
+    """Continuous-batching decode over a paged KV cache (module docstring
+    has the scheduling semantics)."""
+
+    def __init__(self, params: PyTree, cfg: ArchConfig, ecfg: EngineConfig):
+        if any(kind != "attn" for kind in cfg.pattern):
+            raise NotImplementedError(
+                f"ServeEngine requires an attention-only pattern; {cfg.name} "
+                f"has {cfg.pattern}")
+        if cfg.input_mode != "tokens":
+            raise NotImplementedError("ServeEngine serves token models only")
+        self.params, self.cfg, self.ecfg = params, cfg, ecfg
+        self.pc = kvc.PagedCacheConfig(block_size=ecfg.block_size,
+                                       num_blocks=ecfg.num_blocks,
+                                       max_len=ecfg.max_len)
+        self.alloc = kvc.BlockAllocator(ecfg.num_blocks)
+        self.state = model_mod.init_paged_state(cfg, ecfg.num_blocks,
+                                                ecfg.block_size)
+        self.tables = np.zeros((ecfg.max_batch, self.pc.max_blocks_per_seq),
+                               np.int32)
+        self.lanes: list[_Lane | None] = [None] * ecfg.max_batch
+        self.key = jax.random.PRNGKey(ecfg.seed)
+        self.t = 0                           # slot clock
+        self._t0 = None                      # wall clock at run() start
+        self._queue: list[Request] = []
+        self._pending: list[Request] = []    # future arrivals, sorted
+        self._busy: list[int] = []           # per-slot active lane count
+        self._events: list[dict] = []
+        self._records: list[dict] = []
+        self._finished = 0
+
+        temp = float(ecfg.temperature)
+
+        def sample(logits, key):             # logits (G, V) float32
+            if temp > 0.0:
+                return jax.random.categorical(key, logits / temp, axis=-1)
+            return jnp.argmax(logits, axis=-1)
+
+        def decode_fn(params, state, toks, tables, lengths, key):
+            logits, ns = model_mod.paged_decode_step(
+                params, state, {"tokens": toks}, tables, lengths, cfg,
+                impl=ecfg.impl)
+            nxt = sample(logits[:, 0].astype(jnp.float32), key)
+            return nxt.astype(jnp.int32), ns
+
+        def prefill_fn(params, state, toks, tables, plens, key):
+            logits, kv_stacked = model_mod.prefill_forward(
+                params, {"tokens": toks}, cfg, impl=ecfg.impl)
+
+            def write_layer(pools, kv):
+                k, v = kv
+                kp, vp = kvc.write_prefill_kv(pools["k_pool"], pools["v_pool"],
+                                              k, v, tables, plens)
+                return {"k_pool": kp, "v_pool": vp}
+
+            new_state = {name: jax.vmap(write_layer)(state[name],
+                                                     kv_stacked[name])
+                         for name in state}
+            g = toks.shape[0]
+            last = logits[jnp.arange(g), plens - 1].astype(jnp.float32)
+            nxt = sample(last, key)
+            return nxt.astype(jnp.int32), new_state
+
+        self._decode = jax.jit(decode_fn)
+        self._prefill = jax.jit(prefill_fn)   # retraces per (G, S) shape
+
+    # ------------------------------------------------------------ scheduling
+    def submit(self, requests: list[Request]) -> None:
+        self._pending.extend(requests)
+        self._pending.sort(key=lambda r: r.arrival)
+
+    def _admit(self) -> list[tuple[int, Request]]:
+        """Arrivals -> queue -> free lanes, all-or-nothing on blocks."""
+        while self._pending and self._pending[0].arrival <= self.t:
+            self._queue.append(self._pending.pop(0))
+        admitted = []
+        for i, lane in enumerate(self.lanes):
+            if lane is not None or not self._queue:
+                continue
+            req = self._queue[0]
+            plen = len(req.prompt)
+            budget = min(plen + req.max_new, self.ecfg.max_len)
+            if plen > self.ecfg.max_len:
+                raise ValueError(f"request {req.rid}: prompt of {plen} tokens "
+                                 f"exceeds max_len={self.ecfg.max_len}")
+            blocks = self.alloc.alloc(self.pc.blocks_for(budget))
+            if blocks is None:               # pool exhausted — stay queued
+                break
+            self._queue.pop(0)
+            self.tables[i, :len(blocks)] = blocks
+            self.lanes[i] = _Lane(
+                rid=req.rid, blocks=blocks, ctx_len=0, budget=budget,
+                max_new=req.max_new, tokens=list(map(int, req.prompt)),
+                record={"rid": req.rid, "arrival": req.arrival,
+                        "admitted": self.t, "prompt_len": plen})
+            admitted.append((i, req))
+            self._events.append({"slot": self.t, "kind": "admit",
+                                 "participants": [i], "round_index": req.rid})
+        return admitted
+
+    def _next_key(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def _wall(self) -> float:
+        return time.time() - self._t0
+
+    def _emit_token(self, i: int, tok: int) -> None:
+        """Account one generated token on lane i; evict when done."""
+        lane = self.lanes[i]
+        lane.tokens.append(tok)
+        lane.produced += 1
+        if lane.produced == 1:
+            lane.record["first_token"] = self.t
+            lane.record["ttft_s"] = self._wall()
+        # next decode would write at position ctx_len — stop when that
+        # position falls outside the request's block budget
+        if lane.produced >= lane.max_new or lane.ctx_len + 1 > lane.budget:
+            lane.record.update(finished=self.t, generated=lane.produced,
+                               latency_s=self._wall(),
+                               tokens=list(lane.tokens))
+            self._records.append(lane.record)
+            self._events.append({"slot": self.t, "kind": "finish",
+                                 "participants": [i],
+                                 "round_index": lane.rid})
+            self.alloc.free(lane.blocks)
+            self.lanes[i] = None
+            self._finished += 1
+
+    def _prefill_step(self, admitted: list[tuple[int, Request]]) -> None:
+        idx = [i for i, _ in admitted]
+        plens = np.array([len(r.prompt) for _, r in admitted], np.int32)
+        s = int(-(-plens.max() // 16) * 16)         # pad: fewer retraces
+        toks = np.zeros((len(idx), s), np.int32)
+        for row, (_, req) in enumerate(admitted):
+            toks[row, :len(req.prompt)] = req.prompt
+        nxt, self.state = self._prefill(
+            self.params, self.state, jnp.asarray(toks),
+            jnp.asarray(self.tables[idx]), jnp.asarray(plens),
+            self._next_key())
+        nxt = np.asarray(nxt)
+        self._events.append({"slot": self.t, "kind": "prefill",
+                             "participants": idx,
+                             "round_index": min(r.rid for _, r in admitted)})
+        for row, i in enumerate(idx):
+            self.lanes[i].ctx_len = int(plens[row])
+            self._emit_token(i, int(nxt[row]))
+        self._busy.append(len(idx))
+
+    def _decode_tick(self) -> None:
+        active = [i for i, ln in enumerate(self.lanes) if ln is not None]
+        toks = np.zeros((self.ecfg.max_batch, 1), np.int32)
+        lengths = np.zeros(self.ecfg.max_batch, np.int32)
+        for i in active:
+            toks[i, 0] = self.lanes[i].tokens[-1]
+            lengths[i] = self.lanes[i].ctx_len + 1   # incl. token decoded now
+        nxt, self.state = self._decode(
+            self.params, self.state, jnp.asarray(toks),
+            jnp.asarray(self.tables), jnp.asarray(lengths), self._next_key())
+        nxt = np.asarray(nxt)
+        for i in active:
+            self.lanes[i].ctx_len += 1
+            self._emit_token(i, int(nxt[i]))
+        self._busy.append(len(active))
+
+    def step(self) -> None:
+        """One engine slot: a prefill batch if anything was admitted, else
+        one decode tick for every active lane (classic continuous batching
+        without chunked prefill)."""
+        admitted = self._admit()
+        if admitted:
+            self._prefill_step(admitted)
+        elif any(ln is not None for ln in self.lanes):
+            self._decode_tick()
+        else:
+            self._busy.append(0)                     # idle slot (gap in arrivals)
+        self.t += 1
+
+    def run(self, requests: list[Request]) -> dict:
+        """Serve ``requests`` to completion.  -> {"outputs": {rid: tokens},
+        "records": [...per-request latency records...], "slots", "wall_s",
+        "generated"} — outputs include the prompt prefix."""
+        self.submit(requests)
+        if self._t0 is None:
+            self._t0 = time.time()
+        while (self._pending or self._queue
+               or any(ln is not None for ln in self.lanes)):
+            self.step()
+        jax.block_until_ready(self.state)
+        outputs = {r["rid"]: r["tokens"] for r in self._records}
+        return {"outputs": outputs, "records": list(self._records),
+                "slots": self.t, "wall_s": self._wall(),
+                "generated": sum(r["generated"] for r in self._records)}
+
+    # -------------------------------------------------------------- trace
+    def trace(self, **meta: Any) -> dict:
+        """The engine's run as an ``mll-timeline-trace/v1`` document: one
+        slot per engine step, busy = lanes that produced a token that slot,
+        one round per finished request (round cost = admission->finish
+        slots), per-request latency records under ``meta["requests"]``."""
+        busy = [int(b) for b in self._busy]
+        costs = [int(r["finished"] - r["admitted"] + 1)
+                 for r in self._records]
+        return {
+            "schema": timeline.TRACE_SCHEMA,
+            "slots": self.t,
+            "slots_used": sum(1 for b in busy if b > 0),
+            "rounds_completed": self._finished,
+            "gate_mode": "serve",
+            "busy_slots": busy,
+            "idle_slots": [self.ecfg.max_batch - b for b in busy],
+            "round_costs": costs,
+            "events": list(self._events),
+            "meta": dict(meta, source="serve.engine",
+                         requests=[{k: v for k, v in r.items()
+                                    if k != "tokens"}
+                                   for r in self._records]),
+        }
+
+    def export_trace(self, path: str, **meta: Any) -> str:
+        import json
+        with open(path, "w") as f:
+            json.dump(self.trace(**meta), f, indent=2)
+        return path
+
+    # ---------------------------------------------------------- constructors
+    @classmethod
+    def from_checkpoint(cls, path: str, cfg: ArchConfig,
+                        ecfg: EngineConfig = EngineConfig()) -> "ServeEngine":
+        """An engine serving the averaged u_k from a harness checkpoint."""
+        return cls(load_u_k(path, cfg), cfg, ecfg)

@@ -7,6 +7,11 @@ long_500k: rotating sliding-window / recurrent state, sub-quadratic).
 Serving uses the *merged* model (the weighted average u_k — hubs are
 stateless per the paper, so u_k is what a deployment serves); there is no
 worker axis here.
+
+``generate`` is the offline/sequential path: prefill (one batched forward
+for attention-only models, a per-token loop otherwise) followed by a decode
+loop.  The continuous-batching engine in `repro.serve.engine` is the
+online path.
 """
 from __future__ import annotations
 
@@ -17,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.models import attention as attn_mod
 from repro.models import model as model_mod
 
 PyTree = Any
@@ -27,22 +33,56 @@ def serve_step(params: PyTree, state: PyTree, tokens_or_embeds: dict,
                temperature: float = 0.0, rng: jnp.ndarray | None = None
                ) -> tuple[jnp.ndarray, PyTree]:
     """-> (next_token (B,), new_state). Greedy when temperature == 0."""
+    if temperature > 0.0 and rng is None:
+        raise ValueError(
+            "serve_step: temperature > 0 requests sampling but rng is None — "
+            "pass a PRNG key via rng, or set temperature=0.0 for greedy")
     logits, new_state = model_mod.decode_step(params, state, tokens_or_embeds,
                                               cur, cfg)
     logits = logits[:, 0].astype(jnp.float32)
-    if temperature > 0.0 and rng is not None:
+    if temperature > 0.0:
         nxt = jax.random.categorical(rng, logits / temperature, axis=-1)
     else:
         nxt = jnp.argmax(logits, axis=-1)
     return nxt.astype(jnp.int32), new_state
 
 
+def _batched_prefill(params: PyTree, prompt: jnp.ndarray, cfg: ArchConfig,
+                     max_len: int, key: jnp.ndarray
+                     ) -> tuple[PyTree, jnp.ndarray]:
+    """One forward pass over prompt[:, :-1], caches filled from the captured
+    k/v.  Burns the same number of key splits as the per-token loop so
+    sampled generation is bit-identical to the loop oracle.
+    -> (decode state ready for position plen-1, advanced key)."""
+    b, plen = prompt.shape
+    state = model_mod.init_decode_state(cfg, b, max_len)
+    for _ in range(plen - 1):                    # rng parity with the loop
+        key, _ = jax.random.split(key)
+    if plen > 1:
+        _, kv_stacked = model_mod.prefill_forward(
+            params, {"tokens": prompt[:, :-1]}, cfg)
+
+        def fill(cache, kv):
+            k, v = kv
+            return attn_mod.fill_cache_from_prefill(cache, k, v, cfg)
+
+        # leaves carry the leading super-block axis — vmap the fill over it
+        state = {key_: jax.vmap(fill)(state[key_], kv_stacked[key_])
+                 for key_ in state}
+    return state, key
+
+
 def generate(params: PyTree, prompt: jnp.ndarray, cfg: ArchConfig, *,
              max_new: int = 32, max_len: int | None = None,
-             temperature: float = 0.0, seed: int = 0
-             ) -> jnp.ndarray:
-    """Greedy/sampled generation for the examples: prefill via repeated
-    decode (CPU-friendly), then generate `max_new` tokens."""
+             temperature: float = 0.0, seed: int = 0,
+             prefill: str = "auto") -> jnp.ndarray:
+    """Greedy/sampled generation: prefill, then `max_new` decode steps.
+
+    prefill="batched": one forward pass over the prompt (attention-only
+    patterns, tokens input mode).  "loop": per-token decode over the prompt
+    (any architecture — the parity oracle).  "auto" picks batched when the
+    model supports it.
+    """
     b, plen = prompt.shape
     if max_len is None:
         max_len = plen + max_new
@@ -51,16 +91,26 @@ def generate(params: PyTree, prompt: jnp.ndarray, cfg: ArchConfig, *,
             f"max_len={max_len} cannot hold the prompt ({plen} tokens) plus "
             f"max_new={max_new} generated tokens; the decode cache would be "
             f"overrun — pass max_len >= {plen + max_new}")
-    state = model_mod.init_decode_state(cfg, b, max_len)
+    if prefill not in ("auto", "batched", "loop"):
+        raise ValueError(f"unknown prefill mode {prefill!r}")
+    batchable = (cfg.input_mode == "tokens"
+                 and all(kind == "attn" for kind in cfg.pattern))
+    if prefill == "auto":
+        prefill = "batched" if batchable else "loop"
+
     key = jax.random.PRNGKey(seed)
-
     step_fn = jax.jit(lambda p, s, t, c, k: serve_step(
-        p, s, {"tokens": t}, c, cfg, temperature=temperature, rng=k))
+        p, s, {"tokens": t}, c, cfg, temperature=temperature,
+        rng=k if temperature > 0.0 else None))
 
-    for t in range(plen - 1):
-        key, sub = jax.random.split(key)
-        _, state = step_fn(params, state, prompt[:, t:t + 1],
-                           jnp.asarray(t, jnp.int32), sub)
+    if prefill == "batched":
+        state, key = _batched_prefill(params, prompt, cfg, max_len, key)
+    else:
+        state = model_mod.init_decode_state(cfg, b, max_len)
+        for t in range(plen - 1):
+            key, sub = jax.random.split(key)
+            _, state = step_fn(params, state, prompt[:, t:t + 1],
+                               jnp.asarray(t, jnp.int32), sub)
     out = [prompt]
     cur_tok = prompt[:, -1:]
     for t in range(plen - 1, plen - 1 + max_new):

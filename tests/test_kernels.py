@@ -408,3 +408,56 @@ def test_slstm_train_kernel_grads_match_xla():
     for a, b in zip(jax.tree.leaves(g_k), jax.tree.leaves(g_x)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    atol=2e-3, rtol=2e-3)
+
+
+# ----------------------------------------------------------- flash decode
+def _paged_case(key, b, hkv, group, hd, bs, nb, nmax, lengths):
+    """Random pools + a permuted block table + query for a decode case."""
+    kq, kk, kv, kt = jax.random.split(key, 4)
+    q = jax.random.normal(kq, (b, hkv * group, hd), jnp.float32)
+    k_pool = jax.random.normal(kk, (nb, bs, hkv, hd), jnp.float32)
+    v_pool = jax.random.normal(kv, (nb, bs, hkv, hd), jnp.float32)
+    # each lane gets a distinct random set of physical blocks — the kernel
+    # must follow the indirection, not read the pool in order
+    perm = jax.random.permutation(kt, nb)[:b * nmax].reshape(b, nmax)
+    tables = perm.astype(jnp.int32)
+    return q, k_pool, v_pool, tables, jnp.asarray(lengths, jnp.int32)
+
+
+@pytest.mark.parametrize(
+    "hkv,group,hd,bs,nmax,window,splits,lengths",
+    [
+        (2, 2, 64, 8, 6, 0, 2, [41, 17]),          # GQA, multi-split
+        (1, 4, 80, 16, 4, 0, 4, [64, 3]),          # hd padded 80 -> 128
+        (2, 1, 32, 8, 32, 20, 8, [256, 129]),      # long cache + window
+        (4, 2, 128, 4, 5, 0, 0, [0, 20]),          # inactive lane, default splits
+        (2, 7, 16, 4, 3, 4, 2, [12, 1]),           # qwen2-smoke geometry
+    ])
+def test_flash_decode_matches_paged_ref(hkv, group, hd, bs, nmax, window,
+                                        splits, lengths):
+    """The split-KV flash-decode kernel against the gather+dense-softmax
+    oracle across GQA grouping, non-64 head dims, sliding windows, ragged
+    lengths and inactive (length-0) lanes — the ISSUE's <= 2e-5 bound."""
+    b = len(lengths)
+    nb = max(b * nmax + 1, 8)
+    q, kp, vp, tables, lens = _paged_case(
+        jax.random.PRNGKey(hkv * 1000 + hd), b, hkv, group, hd, bs, nb,
+        nmax, lengths)
+    out = kops.flash_decode(q, kp, vp, tables, lens, window=window,
+                            num_splits=splits)
+    want = ref.flash_decode_ref(q, kp, vp, tables, lens, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    # inactive lanes are exact zeros, not just small
+    inactive = np.asarray(lens) == 0
+    if inactive.any():
+        assert (np.asarray(out)[inactive] == 0).all()
+
+
+def test_flash_decode_softcap_matches_ref():
+    q, kp, vp, tables, lens = _paged_case(
+        jax.random.PRNGKey(7), 2, 2, 2, 64, 8, 17, 4, [25, 31])
+    out = kops.flash_decode(q, kp, vp, tables, lens, softcap=30.0)
+    want = ref.flash_decode_ref(q, kp, vp, tables, lens, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)

@@ -1,0 +1,265 @@
+"""Serving engine: batched prefill parity, paged-KV decode correctness,
+continuous-batching scheduling (block reuse), trace schema, checkpoint
+loading, and the no-silent-fallback guarantee for the flash-decode path.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.core import timeline
+from repro.models import model as model_mod
+from repro.serve import serve_step as ss
+from repro.serve.engine import (EngineConfig, Request, ServeEngine,
+                                load_u_k, poisson_arrivals)
+from repro.serve.kv_cache import BlockAllocator, PagedCacheConfig
+
+CFG = dataclasses.replace(get_smoke_config("qwen2-0.5b"),
+                          param_dtype="float32", compute_dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model_mod.init_model(jax.random.PRNGKey(0), CFG)
+
+
+def _prompts(n, lo=4, hi=10, seed=1):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, CFG.vocab_size,
+                         size=int(rng.integers(lo, hi))).astype(np.int32)
+            for _ in range(n)]
+
+
+# ------------------------------------------------------------ serve_step API
+def test_serve_step_temperature_without_rng_raises(params):
+    state = model_mod.init_decode_state(CFG, 1, 8)
+    tok = jnp.zeros((1, 1), jnp.int32)
+    with pytest.raises(ValueError, match="temperature.*rng"):
+        ss.serve_step(params, state, {"tokens": tok},
+                      jnp.asarray(0, jnp.int32), CFG, temperature=0.7,
+                      rng=None)
+
+
+# ------------------------------------------------------------ prefill parity
+def test_batched_prefill_matches_loop_oracle_greedy(params):
+    """One batched forward fills the dense decode caches exactly where the
+    per-token loop would have: greedy outputs are token-identical."""
+    for p in _prompts(3):
+        pr = jnp.asarray(p)[None]
+        loop = ss.generate(params, pr, CFG, max_new=8, prefill="loop")
+        batched = ss.generate(params, pr, CFG, max_new=8, prefill="batched")
+        np.testing.assert_array_equal(np.asarray(loop), np.asarray(batched))
+
+
+def test_batched_prefill_matches_loop_oracle_sampled(params):
+    """The batched path burns the same PRNG splits as the loop, so SAMPLED
+    generation is bit-identical too (same seed -> same tokens)."""
+    pr = jnp.asarray(_prompts(1, seed=5)[0])[None]
+    loop = ss.generate(params, pr, CFG, max_new=8, temperature=0.8, seed=3,
+                       prefill="loop")
+    batched = ss.generate(params, pr, CFG, max_new=8, temperature=0.8,
+                          seed=3, prefill="batched")
+    np.testing.assert_array_equal(np.asarray(loop), np.asarray(batched))
+
+
+def test_batched_prefill_rejected_for_recurrent_patterns():
+    cfg = get_smoke_config("jamba-v0.1-52b")      # mamba blocks in pattern
+    params = model_mod.init_model(jax.random.PRNGKey(0), cfg)
+    pr = jnp.ones((1, 6), jnp.int32)
+    with pytest.raises(NotImplementedError, match="attention-only"):
+        ss.generate(params, pr, cfg, max_new=2, prefill="batched")
+    # "auto" silently falls back to the loop for these architectures
+    out = ss.generate(params, pr, cfg, max_new=2, prefill="auto")
+    assert out.shape == (1, 8)
+
+
+# --------------------------------------------------------------- paged decode
+def _run_engine(params, prompts, max_new=8, cfg=CFG, **eng_kw):
+    kw = dict(max_batch=4, block_size=4, num_blocks=64, max_len=64)
+    kw.update(eng_kw)
+    eng = ServeEngine(params, cfg, EngineConfig(**kw))
+    out = eng.run([Request(rid=i, prompt=p, max_new=max_new)
+                   for i, p in enumerate(prompts)])
+    return eng, out
+
+
+def test_paged_greedy_identical_to_dense_and_full_forward(params):
+    """The ISSUE's three-way agreement: continuous-batching paged decode,
+    the legacy dense rotating-buffer `generate`, and teacher-forcing the
+    full generated sequence through `forward_train` all pick the same
+    greedy tokens."""
+    prompts = _prompts(3, seed=2)
+    _, out = _run_engine(params, prompts)
+    for i, p in enumerate(prompts):
+        dense = np.asarray(ss.generate(params, jnp.asarray(p)[None], CFG,
+                                       max_new=8))[0]
+        paged = np.asarray(out["outputs"][i])
+        np.testing.assert_array_equal(paged, dense)
+        # full-sequence forward over the generated text: the argmax at each
+        # generated position reproduces the next token
+        logits, _ = model_mod.forward_train(params, {"tokens": paged[None]},
+                                            CFG)
+        preds = np.asarray(jnp.argmax(logits[0], axis=-1))
+        plen = len(p)
+        np.testing.assert_array_equal(preds[plen - 1:-1], paged[plen:])
+
+
+def test_paged_sliding_window_matches_dense(params):
+    """Sliding-window masking over the paged cache (lengths-relative) vs
+    the dense rotating buffer (absolute positions): same greedy tokens."""
+    cfg = dataclasses.replace(CFG, sliding_window=6)
+    prompts = _prompts(2, lo=8, hi=12, seed=4)
+    _, out = _run_engine(params, prompts, cfg=cfg)
+    for i, p in enumerate(prompts):
+        dense = np.asarray(ss.generate(params, jnp.asarray(p)[None], cfg,
+                                       max_new=8))[0]
+        np.testing.assert_array_equal(np.asarray(out["outputs"][i]), dense)
+
+
+def test_engine_block_reuse_mid_batch(params):
+    """More requests than lanes against a pool sized so the queue can only
+    drain by reusing a finished request's freed blocks; every output still
+    matches a fresh single-request engine run."""
+    prompts = _prompts(5, seed=7)
+    # pool fits exactly 2 in-flight requests: ceil(64/4)=16 blocks each
+    eng, out = _run_engine(params, prompts, max_batch=2, num_blocks=32)
+    assert len(out["outputs"]) == 5
+    assert eng.alloc.available == 32                 # all blocks returned
+    for i, p in enumerate(prompts):
+        _, solo = _run_engine(params, [p], max_batch=1, num_blocks=16)
+        np.testing.assert_array_equal(np.asarray(out["outputs"][i]),
+                                      np.asarray(solo["outputs"][0]))
+
+
+def test_block_allocator_accounting():
+    a = BlockAllocator(8)
+    got = a.alloc(3)
+    assert got is not None and a.available == 5
+    assert a.alloc(6) is None and a.available == 5   # all-or-nothing
+    a.free(got)
+    assert a.available == 8
+    with pytest.raises(ValueError, match="double free"):
+        a.free(got[:1])                              # already back in the pool
+    with pytest.raises(ValueError, match="unknown block"):
+        a.free([99])
+    with pytest.raises(ValueError):
+        PagedCacheConfig(block_size=4, num_blocks=4, max_len=64)
+
+
+# -------------------------------------------------------------------- trace
+def test_engine_trace_is_timeline_schema(params, tmp_path):
+    """The engine emits the SAME event-trace document the training
+    timeline does — `timeline.load_trace` accepts it, the key sets match
+    `plan_trace` exactly, and per-request latency records ride in meta."""
+    prompts = _prompts(3, seed=9)
+    eng, out = _run_engine(params, prompts, max_batch=2, num_blocks=32)
+    path = str(tmp_path / "serve_trace.json")
+    eng.export_trace(path, note="test")
+    doc = timeline.load_trace(path)
+    assert set(doc) == {"schema", "slots", "slots_used", "rounds_completed",
+                        "gate_mode", "busy_slots", "idle_slots",
+                        "round_costs", "events", "meta"}
+    for e in doc["events"]:
+        assert set(e) == {"slot", "kind", "participants", "round_index"}
+    assert doc["gate_mode"] == "serve"
+    assert doc["rounds_completed"] == 3 == len(doc["round_costs"])
+    assert doc["slots"] == out["slots"] == len(doc["busy_slots"])
+    recs = doc["meta"]["requests"]
+    assert len(recs) == 3
+    for r in recs:
+        assert (r["arrival"] <= r["admitted"] <= r["first_token"]
+                <= r["finished"])
+        assert r["generated"] == 8 and r["ttft_s"] <= r["latency_s"]
+    # busy/idle partition the lanes every slot
+    assert all(b + i == 2 for b, i in zip(doc["busy_slots"],
+                                          doc["idle_slots"]))
+
+
+def test_poisson_arrivals_spread_and_idle_slots(params):
+    reqs = poisson_arrivals(_prompts(4, seed=11), max_new=4, rate=0.25,
+                            seed=0)
+    assert [r.arrival for r in reqs] == sorted(r.arrival for r in reqs)
+    eng = ServeEngine(params, CFG, EngineConfig(max_batch=2, block_size=4,
+                                                num_blocks=32, max_len=32))
+    out = eng.run(reqs)
+    assert len(out["outputs"]) == 4
+    # arrivals are spread out, so some slots must sit fully idle
+    assert any(b == 0 for b in eng.trace()["busy_slots"])
+
+
+# -------------------------------------------------- no-silent-fallback path
+def test_engine_pallas_impl_no_fallback(params, monkeypatch):
+    """impl="pallas" serves end-to-end (batched prefill AND paged decode)
+    with every non-kernel attention path booby-trapped: `_sdpa`,
+    `_sdpa_chunked` and both pure-jnp oracles raise if touched.  Tokens
+    must still match the XLA engine's."""
+    from repro.kernels import ref as kref
+    from repro.models import attention as attn_mod
+
+    prompts = _prompts(3, seed=13)
+    _, want = _run_engine(params, prompts)            # XLA oracle first
+
+    def boom(*a, **k):
+        raise AssertionError("XLA/ref attention fallback under impl='pallas'")
+
+    monkeypatch.setattr(attn_mod, "_sdpa", boom)
+    monkeypatch.setattr(attn_mod, "_sdpa_chunked", boom)
+    monkeypatch.setattr(kref, "flash_attention_ref", boom)
+    monkeypatch.setattr(kref, "flash_decode_ref", boom)
+    _, got = _run_engine(params, prompts, impl="pallas")
+    for i in range(len(prompts)):
+        np.testing.assert_array_equal(np.asarray(got["outputs"][i]),
+                                      np.asarray(want["outputs"][i]))
+
+
+def test_engine_rejects_unknown_impl_and_recurrent_patterns(params):
+    with pytest.raises(ValueError, match="unknown impl"):
+        _run_engine(params, _prompts(1), impl="cuda")
+    cfg = get_smoke_config("jamba-v0.1-52b")
+    jp = model_mod.init_model(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(NotImplementedError, match="attention-only"):
+        ServeEngine(jp, cfg, EngineConfig())
+
+
+# --------------------------------------------------------------- checkpoint
+def test_load_u_k_matches_harness_avg_params(tmp_path):
+    """`load_u_k` rebuilds the network from the checkpoint's plan_config,
+    restores the full protocol state and recomputes u_k = X a — identical
+    to the avg_params the training run returned; the engine then serves
+    straight from the checkpoint dir."""
+    from repro.core.mllsgd import MLLConfig
+    from repro.launch.train import TrainLoopConfig, run_training
+
+    cfg = get_smoke_config("qwen2-0.5b")
+    mll = MLLConfig(tau=2, q=1, eta=0.05)
+    ckdir = str(tmp_path / "ck")
+    loop = TrainLoopConfig(steps=4, eval_every=4, seq_len=16,
+                           batch_per_worker=2, tokens_per_worker=2048,
+                           checkpoint_dir=ckdir, checkpoint_every=4)
+    out = run_training(cfg, mll, loop, num_subnets=1, workers_per_subnet=2,
+                       log=lambda *a, **k: None)
+    u = load_u_k(ckdir, cfg)
+    for a, b in zip(jax.tree.leaves(out["avg_params"]), jax.tree.leaves(u)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    eng = ServeEngine.from_checkpoint(
+        ckdir, cfg, EngineConfig(max_batch=2, block_size=4, num_blocks=16,
+                                 max_len=24))
+    res = eng.run([Request(rid=0, prompt=np.arange(1, 7, dtype=np.int32),
+                           max_new=4)])
+    assert len(res["outputs"][0]) == 10
+
+
+def test_load_u_k_legacy_root_fallback(tmp_path):
+    """Dirs written with plain `checkpoint.save` (no state/ subdir) restore
+    through the legacy path."""
+    from repro.train import checkpoint
+
+    params = model_mod.init_model(jax.random.PRNGKey(2), CFG)
+    checkpoint.save(str(tmp_path), params, step=7)
+    u = load_u_k(str(tmp_path), CFG)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(u)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
