@@ -123,15 +123,20 @@ def bench_records(bench: str) -> dict[str, dict]:
     return dict(_BENCH_RECORDS.get(bench, {}))
 
 
-def emit(name: str, value, *, t0: float | None = None, extra: str = ""):
+def emit(name: str, value, *, t0: float | None = None, extra: str = "",
+         tags: dict | None = None):
     """CSV line: name,value[,seconds][,extra].  Also recorded for
-    `write_bench_json`."""
+    `write_bench_json`.  ``tags`` ride along in the JSON record (e.g.
+    ``{"mesh": "4x2", "devices": 8}``) so the nightly gate can compare
+    like-for-like across execution configurations."""
     parts = [name, f"{value:.6f}" if isinstance(value, float) else str(value)]
     rec: dict = {"value": float(value) if isinstance(value, (int, float,
                  np.integer, np.floating)) else value}
     if t0 is not None:
         parts.append(f"{time.time() - t0:.1f}s")
         rec["seconds"] = round(time.time() - t0, 3)
+    if tags:
+        rec["tags"] = dict(tags)
     if extra:
         parts.append(extra)
     _RECORDS[name] = rec

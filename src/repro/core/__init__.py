@@ -7,15 +7,15 @@ from repro.core.protocol import (MixingStrategy, MIXING_REGISTRY, register,
                                  gated_inner_update, init_gated_opt_state,
                                  schedule_mix, state_from_network)
 from repro.core.simulator import (SimConfig, SimResult, simulate, replicate,
-                                  weighted_average, apply_operator,
-                                  barrier_round_slots, mll_round_slots)
+                                  weighted_average, apply_operator)
 from repro.core.timeline import (ReadinessPolicy, POLICY_REGISTRY,
                                  register_policy, get_policy,
                                  available_policies, TimelineEvent,
                                  TimelinePlan, TimelineResult, run_timeline,
                                  make_timeline_step_fn, RateCalibration,
                                  network_with_rates, plan_trace,
-                                 export_trace, load_trace)
+                                 export_trace, load_trace,
+                                 barrier_round_slots, mll_round_slots)
 from repro.core.mllsgd import (MLLConfig, MLLState, build_network, build_state,
                                mll_train_step, apply_schedule,
                                apply_schedule_with_state, phase_of,

@@ -82,6 +82,24 @@ def pack_spec(stacked: PyTree) -> PackSpec:
     return _build_spec(treedef, meta)
 
 
+def shard_spec(spec: PackSpec, num_shards: int) -> PackSpec:
+    """The per-shard layout of a worker-sharded packed buffer.
+
+    Under the SPMD harness the (W, sum C) buffer shards on dim 0: each of
+    ``num_shards`` shards packs/unpacks its own (W/num_shards, sum C) block
+    with UNCHANGED column slots, so `pack` on a shard's (W/num_shards, ...)
+    subtree and a dim-0 slice of the full packed buffer are the same bytes.
+    Equivalently: ``shard_spec(pack_spec(full), n) == pack_spec(local)``.
+    """
+    if num_shards < 1 or spec.num_workers % num_shards:
+        raise ValueError(f"{num_shards} shards must divide the packed "
+                         f"buffer's worker axis W={spec.num_workers}")
+    w = spec.num_workers // num_shards
+    slots = tuple(LeafSlot(s.offset, s.size, (w,) + s.shape[1:], s.dtype)
+                  for s in spec.slots)
+    return PackSpec(spec.treedef, w, spec.total_cols, slots)
+
+
 def all_f32(stacked: PyTree) -> bool:
     """True when every leaf is float32 — the gating condition for the flat
     fast paths.  pack/unpack round-trips and the packed Pallas kernel are

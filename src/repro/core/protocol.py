@@ -123,6 +123,102 @@ def _einsum_operator(t: jnp.ndarray, stacked: PyTree,
     return jax.tree.map(mix, stacked)
 
 
+# ------------------------------------------------------------ SPMD lowering
+@dataclasses.dataclass(frozen=True)
+class SpmdAxis:
+    """Static description of the sharded worker axis inside `shard_map`.
+
+    The SPMD harness (`launch.harness.TrainHarness(mesh=...)`) runs plan
+    slots with the stacked (W, ...) state SHARDED over a mesh axis instead
+    of vmapped on one device; strategies then lower their averaging rounds
+    to real collectives over ``name`` via the ``*_spmd`` methods below.
+
+    The ``data`` mesh axis (when present) REPLICATES compute: sharding the
+    within-worker batch would psum partial loss sums and change the f32
+    reduction order, breaking the bit-identity contract with the
+    single-host vmap path.  It reserves the mesh slot for future
+    within-worker parallelism (FSDP dim-0 sharding, batch splits).
+    """
+    name: str          # mesh axis name the worker dim is sharded over
+    size: int          # number of shards on that axis
+    num_workers: int   # global W
+
+    def __post_init__(self):
+        if self.size < 1 or self.num_workers % self.size:
+            raise ValueError(
+                f"workers mesh axis of size {self.size} must divide "
+                f"W={self.num_workers}")
+
+    @property
+    def per_shard(self) -> int:
+        return self.num_workers // self.size
+
+    def offset(self) -> jnp.ndarray:
+        """Traced global index of this shard's first worker row."""
+        return jax.lax.axis_index(self.name) * self.per_shard
+
+
+def spmd_capable_mixing() -> tuple[str, ...]:
+    """Registered strategies with a collective (SPMD) lowering."""
+    return tuple(sorted(n for n, c in MIXING_REGISTRY.items()
+                        if c.spmd_capable))
+
+
+def grouped_spmd_layout(st: MLLState, spmd: SpmdAxis) -> int:
+    """Shards per sub-network for the grouped collective lowerings.
+
+    Returns 0 when the whole worker axis lives on one shard (the round is
+    shard-local vmap math), otherwise the number of shards each
+    sub-network spans.  The psum/ppermute lowerings need subnet-ALIGNED
+    shards — every shard entirely inside one sub-network — so the subnet
+    mean is one grouped all-reduce and the hub stage one permute per roll.
+    """
+    d, nd = _grouped_dims(st)
+    ps = spmd.per_shard
+    if spmd.size == 1:
+        return 0
+    if nd % ps:
+        raise ValueError(
+            f"grouped SPMD mixing needs subnet-aligned shards: {ps} workers "
+            f"per shard must divide Nd={nd} (W={spmd.num_workers} over "
+            f"{spmd.size} shards, D={d} sub-networks); use mixing='dense' "
+            "or a workers axis that divides the subnet size")
+    return nd // ps
+
+
+def _subnet_groups(d: int, sps: int) -> list[list[int]]:
+    """psum replica groups: sub-network g owns shards [g*sps, (g+1)*sps)."""
+    return [[g * sps + s for s in range(sps)] for g in range(d)]
+
+
+def _einsum_operator_spmd(t: jnp.ndarray, local: PyTree,
+                          mix_dtype: str | None, spmd: SpmdAxis) -> PyTree:
+    """SPMD lowering of `_einsum_operator`: all-gather the contracted
+    worker axis, contract into this shard's output rows only.
+
+    Bit-identical to the full (W, W) einsum: each output row's contraction
+    runs over the same gathered operand with the same length — only the
+    set of output rows shrinks.  One all-gather per leaf (or ONE for the
+    packed buffer where the flat paths are enabled)."""
+    if packing.flat_paths_enabled() and mix_dtype in (None, "float32") \
+            and packing.all_f32(local):
+        spec = packing.pack_spec(local)           # per-shard (W/size, sum C)
+        buf = packing.pack(local, spec)
+        full = jax.lax.all_gather(buf, spmd.name, axis=0, tiled=True)
+        tl = jax.lax.dynamic_slice_in_dim(
+            t.astype(jnp.float32), spmd.offset(), spmd.per_shard, 1)
+        return packing.unpack(jnp.einsum("ij,ic->jc", tl, full), spec)
+
+    def mix(x):
+        xm = x.astype(mix_dtype) if mix_dtype else x
+        full = jax.lax.all_gather(xm, spmd.name, axis=0, tiled=True)
+        tl = jax.lax.dynamic_slice_in_dim(
+            t.astype(xm.dtype), spmd.offset(), spmd.per_shard, 1)
+        y = jnp.einsum("ij,i...->j...", tl, full)
+        return y.astype(x.dtype)
+    return jax.tree.map(mix, local)
+
+
 def _grouped_dims(st: MLLState) -> tuple[int, int]:
     if st.workers_per_subnet <= 0:
         raise ValueError(
@@ -141,12 +237,37 @@ def hub_average_dense(stacked: PyTree, st: MLLState,
     return _einsum_operator(st.z_op, stacked, mix_dtype)
 
 
+def _product_mean(v: jnp.ndarray, xg: jnp.ndarray) -> jnp.ndarray:
+    """Within-subnet weighted mean of (D, Nd, ...) as rounded per-worker
+    PRODUCTS + an explicit reduce over Nd — term-for-term the arithmetic
+    the SPMD psum lowering performs (an einsum's fused multiply-accumulate
+    has no cross-device analogue, so the two would differ in ULPs)."""
+    return (v.reshape(v.shape + (1,) * (xg.ndim - 2)) * xg).sum(axis=1)
+
+
+def _roll_mix(h: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    """y_e = sum_o H[(e+o) mod D, e] * z_{(e+o) mod D}, accumulated in
+    ascending roll order o: one elementwise product + add per roll, matching
+    the SPMD ppermute lowering add-for-add (general H — the circulant
+    `hub_average_ppermute` loop is the same shape with scalar weights)."""
+    d = z.shape[0]
+    e = np.arange(d)
+    y = None
+    for o in range(d):
+        w = h[(e + o) % d, e].reshape((d,) + (1,) * (z.ndim - 1))
+        term = w * (jnp.roll(z, -o, axis=0) if o else z)
+        y = term if y is None else y + term
+    return y
+
+
 def subnet_average_two_stage(stacked: PyTree, st: MLLState,
                              mix_dtype: str | None = None) -> PyTree:
-    """Grouped weighted mean: reshape W->(D, Nd), contract Nd, broadcast back.
+    """Grouped weighted mean: reshape W->(D, Nd), reduce Nd, broadcast back.
 
-    GSPMD lowers the Nd contraction to an all-reduce whose replica groups stay
-    inside each pod (ICI), instead of a dense W x W global contraction.
+    GSPMD lowers the Nd reduction to an all-reduce whose replica groups stay
+    inside each pod (ICI), instead of a dense W x W global contraction; the
+    explicit `_product_mean` form keeps it bit-compatible with the
+    shard_map psum lowering (`subnet_average_two_stage_spmd`).
     """
     d, nd = _grouped_dims(st)
     v = st.v_weights.reshape(d, nd)
@@ -154,7 +275,7 @@ def subnet_average_two_stage(stacked: PyTree, st: MLLState,
     def mix(x):
         xm = x.astype(mix_dtype) if mix_dtype else x
         xg = xm.reshape((d, nd) + x.shape[1:])
-        mean = jnp.einsum("dn,dn...->d...", v.astype(xm.dtype), xg)
+        mean = _product_mean(v.astype(xm.dtype), xg)
         y = jnp.broadcast_to(mean[:, None], xg.shape).reshape(x.shape)
         return y.astype(x.dtype)
     return jax.tree.map(mix, stacked)
@@ -162,18 +283,115 @@ def subnet_average_two_stage(stacked: PyTree, st: MLLState,
 
 def hub_average_two_stage(stacked: PyTree, st: MLLState,
                           mix_dtype: str | None = None) -> PyTree:
-    """Subnet average, then H-mix the D hub models over the pod axis."""
+    """Subnet average, then H-mix the D hub models over the pod axis (as
+    weighted rolls — see `_roll_mix` for why not a D x D einsum)."""
     d, nd = _grouped_dims(st)
     v = st.v_weights.reshape(d, nd)
 
     def mix(x):
         xm = x.astype(mix_dtype) if mix_dtype else x
         xg = xm.reshape((d, nd) + x.shape[1:])
-        z = jnp.einsum("dn,dn...->d...", v.astype(xm.dtype), xg)   # hub models
-        y = jnp.einsum("de,d...->e...", st.h.astype(xm.dtype), z)  # H mixing
+        z = _product_mean(v.astype(xm.dtype), xg)            # hub models
+        y = _roll_mix(st.h.astype(xm.dtype), z)              # H mixing
         out = jnp.broadcast_to(y[:, None], xg.shape).reshape(x.shape)
         return out.astype(x.dtype)
     return jax.tree.map(mix, stacked)
+
+
+def _grouped_spmd_z(x, st: MLLState, spmd: SpmdAxis, sps: int,
+                    mix_dtype: str | None):
+    """This shard's sub-network mean (no worker axis): local weighted
+    partial products reduced over the shard's rows, then an intra-subnet
+    grouped psum.  Bit-identical to `_product_mean` when each shard holds
+    one worker (the add orders coincide); otherwise equal to reduction
+    order."""
+    d, _ = _grouped_dims(st)
+    ps = spmd.per_shard
+    xm = x.astype(mix_dtype) if mix_dtype else x
+    vl = jax.lax.dynamic_slice_in_dim(
+        st.v_weights.astype(xm.dtype), spmd.offset(), ps, 0)
+    part = (vl.reshape((ps,) + (1,) * (x.ndim - 1)) * xm).sum(axis=0)
+    if sps > 1:
+        part = jax.lax.psum(part, spmd.name,
+                            axis_index_groups=_subnet_groups(d, sps))
+    return xm, part
+
+
+def subnet_average_two_stage_spmd(local: PyTree, st: MLLState,
+                                  spmd: SpmdAxis,
+                                  mix_dtype: str | None = None) -> PyTree:
+    """`subnet_average_two_stage` under shard_map: the block-diag subnet
+    mean becomes an intra-subnet grouped psum (replica groups =
+    `_subnet_groups`), broadcast back over this shard's worker rows."""
+    sps = grouped_spmd_layout(st, spmd)
+    if sps == 0:                    # whole worker axis on this shard
+        return subnet_average_two_stage(local, st, mix_dtype)
+
+    def mix(x):
+        xm, z = _grouped_spmd_z(x, st, spmd, sps, mix_dtype)
+        return jnp.broadcast_to(z[None], xm.shape).astype(x.dtype)
+    return jax.tree.map(mix, local)
+
+
+def _hub_spmd_rolls(local: PyTree, st: MLLState, spmd: SpmdAxis,
+                    mix_dtype: str | None, terms) -> PyTree:
+    """Shared hub-stage SPMD skeleton: subnet mean via grouped psum, then
+    ``terms(z, roll)`` summed over the rolls the strategy emits — each roll
+    one `ppermute` of the hub model along the subnet-sharded axis."""
+    d, _ = _grouped_dims(st)
+    sps = grouped_spmd_layout(st, spmd)
+    assert sps > 0, "callers handle the single-shard case"
+
+    def roll(z, o):
+        if not o:
+            return z
+        perm = [((s + o * sps) % spmd.size, s) for s in range(spmd.size)]
+        return jax.lax.ppermute(z, spmd.name, perm=perm)
+
+    def mix(x):
+        xm, z = _grouped_spmd_z(x, st, spmd, sps, mix_dtype)
+        y = None
+        for term in terms(xm.dtype, z, roll):
+            y = term if y is None else y + term
+        return jnp.broadcast_to(y[None], xm.shape).astype(x.dtype)
+    return jax.tree.map(mix, local)
+
+
+def hub_average_two_stage_spmd(local: PyTree, st: MLLState, spmd: SpmdAxis,
+                               mix_dtype: str | None = None) -> PyTree:
+    """`hub_average_two_stage` under shard_map: circulant-indexed rolls of
+    the hub model via `ppermute`, each weighted by the RECEIVER's H column
+    entry (general H) — add-for-add the `_roll_mix` accumulation."""
+    d, _ = _grouped_dims(st)
+    sps = grouped_spmd_layout(st, spmd)
+    if sps == 0:
+        return hub_average_two_stage(local, st, mix_dtype)
+    e = np.arange(d)
+
+    def terms(dtype, z, roll):
+        h = st.h.astype(dtype)
+        sub = jax.lax.axis_index(spmd.name) // sps     # this shard's subnet
+        for o in range(d):
+            yield jnp.take(h[(e + o) % d, e], sub) * roll(z, o)
+    return _hub_spmd_rolls(local, st, spmd, mix_dtype, terms)
+
+
+def hub_average_ppermute_spmd(local: PyTree, st: MLLState, spmd: SpmdAxis,
+                              mix_dtype: str | None = None) -> PyTree:
+    """`hub_average_ppermute` under shard_map: one `ppermute` per NONZERO
+    circulant coefficient (wire traffic scales with hub-graph degree), the
+    zero-coefficient rolls skipped exactly as in the vmap loop."""
+    sps = grouped_spmd_layout(st, spmd)
+    if sps == 0:
+        return hub_average_ppermute(local, st, mix_dtype)
+    coeffs = _circulant_coeffs(st)
+
+    def terms(dtype, z, roll):
+        for o, c in enumerate(coeffs):
+            if abs(float(c)) < 1e-12:
+                continue                     # non-neighbour: no traffic
+            yield jnp.asarray(c, dtype) * roll(z, o)
+    return _hub_spmd_rolls(local, st, spmd, mix_dtype, terms)
 
 
 def _int8_quantize(x: jnp.ndarray, axes: tuple[int, ...]) -> tuple:
@@ -216,7 +434,7 @@ def hub_average_ppermute(stacked: PyTree, st: MLLState,
     def mix(x):
         xm = x.astype(mix_dtype) if mix_dtype else x
         xg = xm.reshape((d, nd) + x.shape[1:])
-        z = jnp.einsum("dn,dn...->d...", v.astype(xm.dtype), xg)
+        z = _product_mean(v.astype(xm.dtype), xg)
         y = None
         for o, c in enumerate(coeffs):
             if abs(float(c)) < 1e-12:
@@ -330,6 +548,9 @@ class MixingStrategy:
     through ``lax.switch``.
     """
     name: str = "?"
+    # strategies with a collective lowering (the ``*_spmd`` methods) set
+    # this True; the SPMD harness refuses meshes for the rest up front
+    spmd_capable: bool = False
 
     def __init__(self, mix_dtype: str | None = None):
         self.mix_dtype = mix_dtype
@@ -352,6 +573,36 @@ class MixingStrategy:
     def hub_with_state(self, stacked: PyTree, st: MLLState,
                        state: PyTree) -> tuple[PyTree, PyTree]:
         return self.hub(stacked, st), state
+
+    # ---- SPMD (shard_map) lowering: inputs/outputs are this shard's
+    # (W/size, ...) worker rows; collectives run over ``spmd.name``
+    def validate_spmd(self, st: MLLState, spmd: SpmdAxis) -> None:
+        """Raise (at harness build time, before any tracing) when this
+        strategy cannot lower the given mesh layout to collectives."""
+        if not self.spmd_capable:
+            raise ValueError(
+                f"mixing={self.name!r} has no SPMD collective lowering; "
+                f"strategies that run on a mesh: {spmd_capable_mixing()}")
+
+    def subnet_spmd(self, local: PyTree, st: MLLState,
+                    spmd: SpmdAxis) -> PyTree:
+        raise NotImplementedError(
+            f"mixing={self.name!r} has no SPMD subnet lowering")
+
+    def hub_spmd(self, local: PyTree, st: MLLState,
+                 spmd: SpmdAxis) -> PyTree:
+        raise NotImplementedError(
+            f"mixing={self.name!r} has no SPMD hub lowering")
+
+    def subnet_spmd_with_state(self, local: PyTree, st: MLLState,
+                               state: PyTree, spmd: SpmdAxis,
+                               ) -> tuple[PyTree, PyTree]:
+        return self.subnet_spmd(local, st, spmd), state
+
+    def hub_spmd_with_state(self, local: PyTree, st: MLLState,
+                            state: PyTree, spmd: SpmdAxis,
+                            ) -> tuple[PyTree, PyTree]:
+        return self.hub_spmd(local, st, spmd), state
 
 
 MIXING_REGISTRY: dict[str, type[MixingStrategy]] = {}
@@ -383,7 +634,10 @@ def available_mixing() -> tuple[str, ...]:
 class DenseMixing(MixingStrategy):
     """The paper's matrices verbatim: X V and X Z as W x W einsums.  Works
     for unequal-size sub-networks; GSPMD lowers the worker-axis contraction
-    to data/pod collectives."""
+    to data/pod collectives.  The explicit SPMD lowering is
+    gather+contract: all-gather the worker axis, einsum into this shard's
+    output rows only (bit-identical — same contraction per output row)."""
+    spmd_capable = True
 
     def subnet(self, stacked, st):
         return subnet_average_dense(stacked, st, self.mix_dtype)
@@ -391,11 +645,20 @@ class DenseMixing(MixingStrategy):
     def hub(self, stacked, st):
         return hub_average_dense(stacked, st, self.mix_dtype)
 
+    def subnet_spmd(self, local, st, spmd):
+        return _einsum_operator_spmd(st.v_op, local, self.mix_dtype, spmd)
+
+    def hub_spmd(self, local, st, spmd):
+        return _einsum_operator_spmd(st.z_op, local, self.mix_dtype, spmd)
+
 
 @register("two_stage")
 class TwoStageMixing(MixingStrategy):
     """Structured V/Z: within-pod replica-group all-reduce + small D x D
-    hub mix instead of one dense W x W contraction."""
+    hub mix instead of one dense W x W contraction.  SPMD lowering: the
+    subnet mean is an intra-subnet grouped `psum`, the hub stage
+    receiver-weighted `ppermute` rolls."""
+    spmd_capable = True
 
     def subnet(self, stacked, st):
         return subnet_average_two_stage(stacked, st, self.mix_dtype)
@@ -403,14 +666,32 @@ class TwoStageMixing(MixingStrategy):
     def hub(self, stacked, st):
         return hub_average_two_stage(stacked, st, self.mix_dtype)
 
+    def validate_spmd(self, st, spmd):
+        super().validate_spmd(st, spmd)
+        grouped_spmd_layout(st, spmd)      # raises on misaligned shards
+
+    def subnet_spmd(self, local, st, spmd):
+        return subnet_average_two_stage_spmd(local, st, spmd, self.mix_dtype)
+
+    def hub_spmd(self, local, st, spmd):
+        return hub_average_two_stage_spmd(local, st, spmd, self.mix_dtype)
+
 
 @register("ppermute")
 class PPermuteMixing(TwoStageMixing):
     """Circulant-H hub mixing as coefficient-weighted rolls: DCN bytes scale
-    with hub-graph degree, not D.  Subnet rounds stay two-stage."""
+    with hub-graph degree, not D.  Subnet rounds stay two-stage.  SPMD
+    lowering: one `ppermute` per nonzero circulant coefficient."""
 
     def hub(self, stacked, st):
         return hub_average_ppermute(stacked, st, self.mix_dtype)
+
+    def validate_spmd(self, st, spmd):
+        super().validate_spmd(st, spmd)
+        _circulant_coeffs(st)              # raises on non-circulant H
+
+    def hub_spmd(self, local, st, spmd):
+        return hub_average_ppermute_spmd(local, st, spmd, self.mix_dtype)
 
 
 @register("int8")
@@ -418,10 +699,20 @@ class Int8Mixing(TwoStageMixing):
     """ppermute wire format with int8-quantized hub models (biased).
 
     ``mix_dtype`` applies to the SUBNET rounds only (inherited two_stage);
-    the hub wire format is int8 + f32 scales by definition."""
+    the hub wire format is int8 + f32 scales by definition.  NOT
+    spmd-capable (despite inheriting TwoStageMixing): the int8 wire needs
+    a typed collective path so the permute carries int8 buffers, not the
+    f32 rolls the inherited lowering would silently emit."""
+    spmd_capable = False
 
     def hub(self, stacked, st):
         return hub_average_int8(stacked, st)
+
+    def subnet_spmd(self, local, st, spmd):
+        raise NotImplementedError(
+            f"mixing={self.name!r} has no SPMD lowering (int8 wire format)")
+
+    hub_spmd = subnet_spmd
 
 
 @register("int8_ef")
@@ -429,7 +720,16 @@ class Int8EFMixing(TwoStageMixing):
     """int8 hub mixing + error feedback: per-worker f32 residual buffers
     make the long-run averaging unbiased.  Stateful — the engine carries the
     residuals next to the params (same worker layout/sharding).  As with
-    ``int8``, ``mix_dtype`` affects subnet rounds only."""
+    ``int8``, ``mix_dtype`` affects subnet rounds only — and as with
+    ``int8``, NOT spmd-capable until the wire carries typed int8
+    collectives."""
+    spmd_capable = False
+
+    def subnet_spmd(self, local, st, spmd):
+        raise NotImplementedError(
+            f"mixing={self.name!r} has no SPMD lowering (int8 wire format)")
+
+    hub_spmd = subnet_spmd
 
     def init_state(self, stacked_params):
         return init_error_feedback(stacked_params)

@@ -201,28 +201,3 @@ def simulate(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
     u = weighted_average(carry[0], a)
     return SimResult(np.asarray(rec_steps), np.asarray(rec_loss),
                      np.asarray(rec_acc), u)
-
-
-# ------------------------------------------------- time-slot race (Fig. 6/10)
-def barrier_round_slots(rng: np.random.Generator, rates: np.ndarray, tau: int,
-                        rounds: int) -> np.ndarray:
-    """Deprecated alias (warns) — the canonical implementation (and the
-    event-driven wall-clock engine it feeds) lives in `repro.core.timeline`;
-    the `"barrier"` readiness policy draws these exact values."""
-    import warnings
-    warnings.warn("simulator.barrier_round_slots is a deprecated PR-2 alias;"
-                  " use repro.core.timeline.barrier_round_slots",
-                  DeprecationWarning, stacklevel=2)
-    from repro.core.timeline import barrier_round_slots as impl
-    return impl(rng, rates, tau, rounds)
-
-
-def mll_round_slots(tau: int, rounds: int) -> np.ndarray:
-    """Deprecated alias (warns) — see `repro.core.timeline.mll_round_slots`
-    (the `"deadline"` readiness policy's accounting)."""
-    import warnings
-    warnings.warn("simulator.mll_round_slots is a deprecated PR-2 alias; "
-                  "use repro.core.timeline.mll_round_slots",
-                  DeprecationWarning, stacklevel=2)
-    from repro.core.timeline import mll_round_slots as impl
-    return impl(tau, rounds)

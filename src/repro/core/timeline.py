@@ -88,7 +88,7 @@ def barrier_round_slots(rng: np.random.Generator, rates: np.ndarray, tau: int,
     gradient steps (Local SGD / HL-SGD semantics): per worker the slot count
     is a negative-binomial(tau, p_i) sample; the round costs the max over
     workers.  Canonical implementation (the `"barrier"` policy draws these
-    exact values; `simulator.barrier_round_slots` is a deprecated alias)."""
+    exact values)."""
     out = np.empty(rounds, dtype=np.int64)
     for r in range(rounds):
         # number of Bernoulli(p) trials until tau successes
@@ -504,13 +504,21 @@ class NeighborReadyGossipPolicy(ReadinessPolicy):
 
 
 # ---------------------------------------------------------------- execution
-def apply_event_operator(stacked: PyTree, op: jnp.ndarray) -> PyTree:
+def apply_event_operator(stacked: PyTree, op: jnp.ndarray,
+                         spmd: "protocol.SpmdAxis | None" = None) -> PyTree:
     """Per-event dense (W, W) operator with the engine's dtype semantics:
     all-f32 trees take `apply_operator` (flat packed path where gated);
     mixed-dtype trees mix each leaf in its OWN dtype — an f32 einsum would
     silently promote bf16 params (legacy dense-path semantics).  The single
     implementation both event executors share (`EventExecutor._mix_event`
-    and the production `train_step.mll_harness_step`)."""
+    and the production `train_step.mll_harness_step`).
+
+    Under shard_map (``spmd`` set, its axis sharding the worker dim) the
+    contraction lowers to all_gather + a local einsum over each shard's
+    output columns — the same per-output-row arithmetic, so bit-identical
+    to the single-device path."""
+    if spmd is not None and spmd.size > 1:
+        return protocol._einsum_operator_spmd(op, stacked, None, spmd)
     if packing.all_f32(stacked):
         return apply_operator(stacked, op)
     return jax.tree.map(

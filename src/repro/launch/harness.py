@@ -48,6 +48,8 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.core import protocol, timeline
@@ -110,6 +112,26 @@ def _stack_batches(batches: list[dict]) -> dict:
     return {k: jnp.stack([b[k] for b in batches]) for k in batches[0]}
 
 
+def _worker_spec(x, w: int, axis: int = 0) -> P:
+    """PartitionSpec for one leaf: shard the worker dim (size ``w`` at
+    ``axis``) over the mesh's `workers` axis, replicate everything else.
+    Per-slot stacked batches carry the worker dim at axis 1 (the scan axis
+    leads), so the position is an argument, not sniffed from the shape."""
+    shape = jnp.shape(x)
+    if len(shape) > axis and shape[axis] == w:
+        return P(*([None] * axis + ["workers"]))
+    return P()
+
+
+def shard_train_state(state: PyTree, mesh, num_workers: int) -> PyTree:
+    """device_put a train state onto the mesh: worker-leading leaves shard
+    on the `workers` axis, scalars/full-width tables replicate."""
+    def put(x):
+        return jax.device_put(
+            x, NamedSharding(mesh, _worker_spec(x, num_workers)))
+    return jax.tree.map(put, state)
+
+
 class TrainHarness:
     """Compiled plan executor for the production (transformer) trainer.
 
@@ -128,10 +150,30 @@ class TrainHarness:
     ``gate_mode`` is fixed per plan: ``"bernoulli"`` multiplies the plan's
     active mask into the counter-based gate draw (deadline = the legacy
     lock-step trainer bit for bit), ``"forced"`` uses the mask as the gate.
+
+    With ``mesh=`` (a mesh carrying a `workers` axis, e.g.
+    ``make_mesh((4, 2), ("workers", "data"))``) every entry point compiles
+    to `shard_map` over that mesh instead of single-device vmap: each
+    worker shard runs its local slots on its own device slice and mixing
+    events lower to the strategy's REAL collectives (intra-subnet psum,
+    circulant ppermute rolls, all_gather + local einsum for dense) — the
+    paper's communication structure on actual device boundaries, with
+    trajectories bit-identical to the vmap path (tests/test_spmd_subproc).
+    The `data` axis replicates the protocol computation (sharding the
+    batch would change f32 reduction order); it exists so the same mesh
+    shape can carry batch-parallel eval/serving work.
+
+    Bit-identity contract: the full state trajectory (params, opt state,
+    mix state) and every u_k / avg-loss eval match the vmap path bit for
+    bit.  The one exception is the per-worker f32 *loss diagnostic*: the
+    scalar ``nll.mean()`` reduction vectorizes differently at vmap width
+    W than at shard width W/num_shards, so it can wobble in the final
+    ulp (gradients of a mean are order-independent, which is why the
+    state itself never drifts).  Tests pin it with allclose(rtol=1e-5).
     """
 
     def __init__(self, cfg: ArchConfig, mll: MLLConfig, st: MLLState, *,
-                 gate_mode: str, impl: str = "xla"):
+                 gate_mode: str, impl: str = "xla", mesh=None):
         if gate_mode not in ("bernoulli", "forced"):
             raise ValueError(f"unknown gate_mode {gate_mode!r}")
         if impl not in ("xla", "flash", "pallas", "chunked", "auto"):
@@ -140,33 +182,113 @@ class TrainHarness:
             raise ValueError(f"unknown impl {impl!r}")
         self.cfg, self.mll, self.st, self.gate_mode = cfg, mll, st, gate_mode
         self.impl = impl
+        self.mesh, self.spmd = mesh, None
+        self.num_workers = int(st.rates.shape[0])
+        if mesh is not None:
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            if "workers" not in sizes:
+                raise ValueError(
+                    f"mesh axes {sizes} carry no 'workers' axis — the SPMD "
+                    "harness shards the worker fleet on it (--mesh W,D)")
+            if self.num_workers % sizes["workers"]:
+                raise ValueError(
+                    f"mesh workers axis ({sizes['workers']}) must divide "
+                    f"the fleet W={self.num_workers} — fix the mesh shape")
+            self.spmd = protocol.SpmdAxis("workers", int(sizes["workers"]),
+                                          self.num_workers)
+            # fail at construction, not inside the first event's trace
+            protocol.resolve_mixing(mll).validate_spmd(st, self.spmd)
         step = partial(mll_harness_step, cfg=cfg, mll=mll, st=st,
-                       gate_mode=gate_mode, impl=impl)
-
-        def local_scan_impl(state, batches, active):
-            def body(s, xs):
-                b, act = xs
-                return step(s, b, act)
-            return jax.lax.scan(body, state, (batches, active))
+                       gate_mode=gate_mode, impl=impl, spmd=self.spmd)
+        # spmd-free twin used ONLY for `jax.eval_shape` (out_specs): the
+        # collective lowerings call `axis_index`, which is unbound outside
+        # shard_map — the global output shapes are identical either way
+        ref = partial(mll_harness_step, cfg=cfg, mll=mll, st=st,
+                      gate_mode=gate_mode, impl=impl)
 
         def last_metrics(state_metrics):
             state, ms = state_metrics
             return state, jax.tree.map(lambda m: m[-1], ms)
 
-        self.local_scan = jax.jit(
-            lambda s, b, a: last_metrics(local_scan_impl(s, b, a)))
+        def make_local_scan(stepfn):
+            def impl(state, batches, active):
+                def body(s, xs):
+                    b, act = xs
+                    return stepfn(s, b, act)
+                return jax.lax.scan(body, state, (batches, active))
+            return lambda s, b, a: last_metrics(impl(s, b, a))
+
+        # second argument per entry: worker-axis position inside each
+        # positional arg for the shard_map specs (None = replicate the
+        # whole arg — the composed (W, W) event operator is contracted in
+        # full by every shard).  Stacked scan batches carry workers at 1.
+        self.local_scan = self._wrap(
+            make_local_scan(step), (0, 1, 1), make_local_scan(ref))
         self.event_step = {
-            ph: jax.jit(partial(step, phase=ph))
+            ph: self._wrap(partial(step, phase=ph), (0, 0, 0),
+                           partial(ref, phase=ph))
             for ph in (protocol.PHASE_SUBNET, protocol.PHASE_HUB)}
-        self.dense_step = jax.jit(lambda s, b, a, op: step(s, b, a, op=op))
+        self.dense_step = self._wrap(
+            lambda s, b, a, op: step(s, b, a, op=op), (0, 0, 0, None),
+            lambda s, b, a, op: ref(s, b, a, op=op))
         # all-idle event slots (forced plans: a barrier round whose cost
         # exceeds tau ends in mixing with every gate at zero) skip the
         # backward pass and the θ=0 no-op update — loss metrics + mix only
         self.event_step_idle = {
-            ph: jax.jit(partial(step, phase=ph, compute_grads=False))
+            ph: self._wrap(partial(step, phase=ph, compute_grads=False),
+                           (0, 0, 0),
+                           partial(ref, phase=ph, compute_grads=False))
             for ph in (protocol.PHASE_SUBNET, protocol.PHASE_HUB)}
-        self.dense_step_idle = jax.jit(
-            lambda s, b, a, op: step(s, b, a, op=op, compute_grads=False))
+        self.dense_step_idle = self._wrap(
+            lambda s, b, a, op: step(s, b, a, op=op, compute_grads=False),
+            (0, 0, 0, None),
+            lambda s, b, a, op: ref(s, b, a, op=op, compute_grads=False))
+
+    def _wrap(self, fn, rules, shape_fn=None):
+        """jit one entry point; under a mesh, `shard_map` it first.
+
+        ``rules[i]`` is the worker-axis position inside positional arg i
+        (None = replicate the whole arg).  in_specs come from the actual
+        call's shapes, out_specs from `jax.eval_shape` of ``shape_fn``
+        (the spmd-free twin — `fn` itself calls collectives that can't
+        trace outside shard_map) with the lead-axis rule — both cached
+        per arg structure/shapes, so each pow2 scan chunk compiles once,
+        exactly like the plain jit path.  ``check_rep`` is off: the
+        lowerings index full-width tables with `axis_index`, which the
+        replication checker can't see through.
+
+        The returned callable carries ``.build(*args)`` returning the
+        underlying jitted function for those shapes — tests lower it to
+        compiled HLO to assert mixing became psum/ppermute collectives."""
+        if self.mesh is None:
+            jitted = jax.jit(fn)
+            jitted.build = lambda *args: jitted
+            return jitted
+        mesh, w = self.mesh, self.num_workers
+        cache: dict = {}
+
+        def build(*args):
+            key = (jax.tree.structure(args),
+                   tuple((jnp.shape(x), jnp.result_type(x))
+                         for x in jax.tree.leaves(args)))
+            if key not in cache:
+                in_specs = tuple(
+                    jax.tree.map(lambda x: P(), arg) if ax is None else
+                    jax.tree.map(partial(_worker_spec, w=w, axis=ax), arg)
+                    for arg, ax in zip(args, rules))
+                out_specs = jax.tree.map(
+                    partial(_worker_spec, w=w, axis=0),
+                    jax.eval_shape(shape_fn or fn, *args))
+                cache[key] = jax.jit(shard_map(
+                    fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                    check_rep=False))
+            return cache[key]
+
+        def call(*args):
+            return build(*args)(*args)
+
+        call.build = build
+        return call
 
     # ------------------------------------------------------------ driver
     def run_span(self, state: protocol.MLLTrainState,
@@ -282,8 +404,14 @@ def run_plan(cfg: ArchConfig, mll: MLLConfig, network, st: MLLState,
              rate_model: str = "bernoulli",
              last_worker_loss: list | None = None,
              run_config: dict | None = None, impl: str = "xla",
-             log: Callable = print) -> HarnessRun:
+             mesh=None, log: Callable = print) -> HarnessRun:
     """Drive a compiled `TrainHarness` over the whole plan.
+
+    ``mesh`` switches the harness to shard_map execution (see
+    `TrainHarness`): the incoming state is laid out on the mesh up front,
+    and at every host boundary the params are gathered back so u_k, eval
+    and checkpoints are computed on one device exactly as the vmap path
+    computes them — checkpoints stay portable across device counts.
 
     The slot loop surfaces to the host only at eval/checkpoint boundaries;
     u_k = X a is computed ONCE per boundary and shared by eval, periodic
@@ -296,7 +424,12 @@ def run_plan(cfg: ArchConfig, mll: MLLConfig, network, st: MLLState,
     barrier drops rounds that don't fit — so a shorter-budget run is NOT a
     prefix of a longer one; a partial run of the full plan is).
     """
-    harness = TrainHarness(cfg, mll, st, gate_mode=plan.gate_mode, impl=impl)
+    harness = TrainHarness(cfg, mll, st, gate_mode=plan.gate_mode, impl=impl,
+                           mesh=mesh)
+    if mesh is not None:
+        train_state = shard_train_state(train_state, mesh,
+                                        harness.num_workers)
+    gather = jax.device_get if mesh is not None else (lambda t: t)
     a = jnp.asarray(network.a, jnp.float32)
     eval_fn = jax.jit(partial(loss_fn, cfg=cfg, impl=impl))
     history = {"step": [], "loss": [], "avg_loss": []}
@@ -316,11 +449,17 @@ def run_plan(cfg: ArchConfig, mll: MLLConfig, network, st: MLLState,
         done = b
         u = None
         if (eval_every and done % eval_every == 0) or done == plan.slots:
-            u = weighted_average(train_state.params, a)
+            u = weighted_average(gather(train_state.params), a)
             eb = batcher.sample(rng)
             one = {kk: v[0] for kk, v in eb.items()}
             avg_loss, _ = eval_fn(u, one)
-            wl = (float(last_metrics["loss"].mean())
+            # gather BEFORE reducing: .mean() on a worker-sharded (W,)
+            # array would lower to a cross-device reduction whose
+            # accumulation order drifts from the single-device mean.  The
+            # reduction itself stays a jnp mean so the vmap path keeps
+            # emitting the exact bits the legacy trainer reference does
+            wl = (float(jnp.mean(jnp.asarray(
+                      np.asarray(gather(last_metrics["loss"])))))
                   if last_metrics is not None else float("nan"))
             history["step"].append(done)
             history["loss"].append(wl)
@@ -332,7 +471,7 @@ def run_plan(cfg: ArchConfig, mll: MLLConfig, network, st: MLLState,
                     (checkpoint_dir and done == stop)
         if want_ckpt:
             if u is None:
-                u = weighted_average(train_state.params, a)
+                u = weighted_average(gather(train_state.params), a)
             checkpoint.save(checkpoint_dir, u, step=done)
             wl = (None if last_metrics is None else
                   [float(x) for x in np.asarray(last_metrics["loss"])])
@@ -341,6 +480,13 @@ def run_plan(cfg: ArchConfig, mll: MLLConfig, network, st: MLLState,
                 rng_state=rng_state(rng),
                 extra={"policy": policy, "rate_model": rate_model,
                        "last_worker_loss": wl,
+                       # informational only — deliberately OUTSIDE the
+                       # resume guard's plan_config, so checkpoints stay
+                       # portable across mesh shapes / device counts
+                       "mesh": dict(zip(mesh.axis_names,
+                                        (int(s) for s in
+                                         mesh.devices.shape)))
+                       if mesh is not None else None,
                        "plan_config": run_config if run_config is not None
                        else plan_config(mll, network, plan, policy,
                                         rate_model)})
@@ -350,7 +496,7 @@ def run_plan(cfg: ArchConfig, mll: MLLConfig, network, st: MLLState,
     # the final boundary's u is the run's result (recompute only on the
     # resume-past-the-end no-op path)
     u = final_u if final_u is not None \
-        else weighted_average(train_state.params, a)
+        else weighted_average(gather(train_state.params), a)
     out_trace = None
     if trace_path:
         meta = {"policy": policy, "rate_model": rate_model,

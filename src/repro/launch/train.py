@@ -44,6 +44,7 @@ from repro.data.pipeline import LMBatcher, make_token_stream, rng_from_state
 from repro.launch.harness import (CALIBRATION_FILE, measure_worker_rates,
                                   plan_config, resolve_measured_network,
                                   run_plan)
+from repro.launch.mesh import make_mesh
 from repro.models import model as model_mod
 from repro.optim import optimizers as optim_mod
 from repro.train import checkpoint
@@ -69,6 +70,12 @@ class TrainLoopConfig:
     trace_path: str | None = None    # export the event trace (JSON)
     impl: str = "xla"                # mixer implementation: xla | flash |
                                      # pallas (native-training Pallas kernels)
+    mesh: tuple[int, int] | None = None  # (workers, data): compile the plan
+                                     # to shard_map over a device mesh with
+                                     # real mixing collectives (--mesh W,D);
+                                     # None = single-device vmap.  NOT part
+                                     # of the resume guard: trajectories and
+                                     # checkpoints are device-count-portable
 
 
 def replicate_params(params: PyTree, w: int) -> PyTree:
@@ -158,6 +165,18 @@ def run_training(cfg: ArchConfig, mll: MLLConfig, loop: TrainLoopConfig,
         f"in {plan.slots} slots (used {plan.slots_used}, "
         f"idle worker-slots {int(plan.idle_slots.sum())})")
 
+    mesh = None
+    if loop.mesh is not None:
+        mw, md = loop.mesh
+        if mw < 1 or w % mw:
+            raise ValueError(
+                f"mesh {loop.mesh}: the workers axis ({mw}) must divide the "
+                f"fleet W={w} (D={num_subnets} x N={workers_per_subnet}) — "
+                "fix --mesh")
+        mesh = make_mesh((mw, md), ("workers", "data"))
+        log(f"mesh: workers={mw} data={md} over {mw * md} devices "
+            f"({jax.devices()[0].platform})")
+
     # full protocol state: inner-optimizer + mixing state ride along, so
     # MLLConfig(inner_opt=..., mixing="int8_ef") runs end-to-end here
     train_state = init_train_state(stacked, cfg=mll)
@@ -201,7 +220,7 @@ def run_training(cfg: ArchConfig, mll: MLLConfig, loop: TrainLoopConfig,
                    calibration=calibration, trace_path=loop.trace_path,
                    policy=loop.policy, rate_model=loop.rate_model,
                    last_worker_loss=last_worker_loss, run_config=current,
-                   impl=loop.impl, log=log)
+                   impl=loop.impl, mesh=mesh, log=log)
     return {"history": run.history, "avg_params": run.avg_params,
             "network": run.network, "plan": run.plan,
             "train_state": run.train_state, "calibration": run.calibration,
@@ -239,6 +258,12 @@ def main(argv=None):
                     help="mixer implementation for train/eval steps: 'flash'"
                          "/'pallas' run the native-training Pallas kernels "
                          "(fwd + custom-vjp bwd), 'xla' the pure-XLA path")
+    ap.add_argument("--mesh", default=None, metavar="W,D",
+                    help="compile the plan to shard_map over a (workers, "
+                         "data) device mesh with real mixing collectives, "
+                         "e.g. --mesh 4,2 on 8 devices (CPU: set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8); "
+                         "checkpoints stay portable across mesh shapes")
     ap.add_argument("--eval-every", type=int, default=16)
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--resume", action="store_true",
@@ -252,6 +277,14 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = None
+    if args.mesh:
+        try:
+            mesh = tuple(int(x) for x in args.mesh.split(","))
+            if len(mesh) != 2:
+                raise ValueError
+        except ValueError:
+            ap.error(f"--mesh must be 'W,D' (two ints), got {args.mesh!r}")
     rates = tuple(args.rates) if args.rates else 1.0
     mll = MLLConfig(tau=args.tau, q=args.q, eta=args.eta,
                     hub_topology=args.topology, mixing=args.mixing,
@@ -264,7 +297,8 @@ def main(argv=None):
                            if args.checkpoint_dir else 0,
                            policy=args.policy, rate_model=args.rate_model,
                            resume=args.resume, stop_slot=args.stop_slot,
-                           trace_path=args.trace, impl=args.impl)
+                           trace_path=args.trace, impl=args.impl,
+                           mesh=mesh)
     out = run_training(cfg, mll, loop, num_subnets=args.subnets,
                        workers_per_subnet=args.workers_per_subnet)
     losses = out["history"]["avg_loss"]

@@ -147,7 +147,15 @@ def restore(path: str, like: PyTree) -> tuple[PyTree, int]:
             raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
         # narrow the on-disk f32 widening back to the recorded leaf dtype
         # (bfloat16 / ml_dtypes targets; dtype agreement validated above)
-        new_leaves.append(jax.numpy.asarray(arr).astype(leaf.dtype))
+        new = jax.numpy.asarray(arr).astype(leaf.dtype)
+        # when restoring into an SPMD-sharded skeleton, lay the leaf out
+        # like the target — the manifest itself is device-count-agnostic
+        # (always host-gathered numpy), so the same checkpoint restores
+        # onto any mesh, or none
+        sharding = getattr(leaf, "sharding", None)
+        if isinstance(leaf, jax.Array) and sharding is not None:
+            new = jax.device_put(new, sharding)
+        new_leaves.append(new)
     tree = jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(like), new_leaves)
     return tree, int(manifest["step"])

@@ -172,6 +172,7 @@ def mll_harness_step(train_state: MLLTrainState, batch: dict,
                      compute_grads: bool = True,
                      spmd_axis_name=None, impl: str = "xla",
                      remat: str = "none", microbatch: int = 1,
+                     spmd: protocol.SpmdAxis | None = None,
                      ) -> tuple[MLLTrainState, dict]:
     """One PLAN-DRIVEN production slot: the tick of `mll_transformer_state_step`
     with the schedule's ``lax.switch`` replaced by a statically known event.
@@ -192,6 +193,13 @@ def mll_harness_step(train_state: MLLTrainState, batch: dict,
     The local-only specialisation (``phase=PHASE_LOCAL``, ``op=None``) is
     the scan body of the harness's event-sparse local segments.
 
+    Under shard_map (``spmd`` set: the mesh axis sharding the worker dim)
+    the step sees only its shard's ``(W/size, ...)`` slice of state, batch
+    and ``active``; mixing lowers to the strategy's collective lowering
+    (psum / ppermute / all_gather) and the Bernoulli gate is drawn at FULL
+    width then sliced — the counter-based draw is shape-dependent, so this
+    keeps gates bit-identical to the vmap path on every shard layout.
+
     ``compute_grads=False`` is the ALL-IDLE event slot (forced plans: the
     straggler tail of a barrier round ends in mixing with every worker's
     gate at zero): the backward pass and the θ=0 inner update — a state
@@ -209,7 +217,11 @@ def mll_harness_step(train_state: MLLTrainState, batch: dict,
                                           accum_dtype=mll.accum_dtype)
         active = active.astype(st.rates.dtype)
         if gate_mode == "bernoulli":
-            theta = gate_sample(mll.seed, step, st.rates) * active
+            theta = gate_sample(mll.seed, step, st.rates)
+            if spmd is not None and spmd.size > 1:
+                theta = jax.lax.dynamic_slice_in_dim(
+                    theta, spmd.offset(), spmd.per_shard, 0)
+            theta = theta * active
         else:
             theta = active
         optimizer = protocol.resolve_inner_optimizer(mll)
@@ -222,14 +234,25 @@ def mll_harness_step(train_state: MLLTrainState, batch: dict,
         metrics = {"loss": loss, **m}
         params, opt_state = train_state.params, train_state.opt_state
     mix_state = train_state.mix_state
+    sharded = spmd is not None and spmd.size > 1
     if op is not None:
-        params = apply_event_operator(params, op)
+        params = apply_event_operator(params, op, spmd=spmd)
     elif phase != protocol.PHASE_LOCAL:
         # mix_state is always populated up front (init_train_state) — a
         # structure change mid-run would retrace every compiled segment
         strategy = protocol.resolve_mixing(mll)
         if phase == protocol.PHASE_SUBNET:
-            params, mix_state = strategy.subnet_with_state(params, st, mix_state)
+            if sharded:
+                params, mix_state = strategy.subnet_spmd_with_state(
+                    params, st, mix_state, spmd)
+            else:
+                params, mix_state = strategy.subnet_with_state(
+                    params, st, mix_state)
         else:
-            params, mix_state = strategy.hub_with_state(params, st, mix_state)
+            if sharded:
+                params, mix_state = strategy.hub_spmd_with_state(
+                    params, st, mix_state, spmd)
+            else:
+                params, mix_state = strategy.hub_with_state(params, st,
+                                                            mix_state)
     return MLLTrainState(params, opt_state, mix_state, step), metrics

@@ -63,6 +63,27 @@ def test_pack_spec_rejects_empty_and_mismatched_worker_axes():
         packing.pack_spec({"a": jnp.zeros(()), "b": jnp.zeros((4, 3))})
 
 
+def test_shard_spec_matches_local_pack_spec():
+    """The documented equivalence: `shard_spec(pack_spec(full), n)` is the
+    spec of a dim-0 shard, so packing a shard's subtree equals the same
+    rows of the full packed buffer (the SPMD harness's (W, sum C) dim-0
+    sharding contract)."""
+    tree = _tree(jax.random.PRNGKey(0))
+    spec = packing.pack_spec(tree)
+    for n in (1, 2, 4):
+        w = W // n
+        sub = jax.tree.map(lambda x: x[:w], tree)
+        local = packing.shard_spec(spec, n)
+        assert local == packing.pack_spec(sub)
+        np.testing.assert_array_equal(
+            np.asarray(packing.pack(sub, local)),
+            np.asarray(packing.pack(tree, spec)[:w]))
+    with pytest.raises(ValueError, match="must divide"):
+        packing.shard_spec(spec, 3)
+    with pytest.raises(ValueError, match="must divide"):
+        packing.shard_spec(spec, 0)
+
+
 @pytest.mark.parametrize("seed", [0, 1, 7])
 def test_packed_vs_per_leaf_bit_equality(seed):
     """ONE packed launch must reproduce the per-leaf launch loop bit for

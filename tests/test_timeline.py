@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import baselines, simulator, timeline
+from repro.core import baselines, timeline
 from repro.core.hierarchy import MLLSchedule
 from repro.core.simulator import SimConfig, simulate
 from repro.core.timeline import (GlobalBarrierPolicy, TimelinePlan,
@@ -134,13 +134,6 @@ def test_barrier_accounting_matches_legacy_draws_exactly():
                                  8, plan.rounds_completed)
     np.testing.assert_array_equal(plan.round_costs, legacy)
     assert plan.slots_used == legacy.sum() <= 256
-    # the deprecated simulator alias forwards to the same implementation
-    # AND warns (PR-2 migration contract)
-    with pytest.deprecated_call():
-        alias = simulator.barrier_round_slots(np.random.default_rng(7),
-                                              np.asarray(rates), 8,
-                                              plan.rounds_completed)
-    np.testing.assert_array_equal(alias, legacy)
 
 
 def test_deadline_accounting_is_mll_round_slots():
@@ -148,9 +141,6 @@ def test_deadline_accounting_is_mll_round_slots():
     plan = get_policy("deadline").plan(net, MLLSchedule(tau=8, q=2), 80,
                                        np.random.default_rng(0))
     np.testing.assert_array_equal(plan.round_costs, mll_round_slots(8, 10))
-    with pytest.deprecated_call():
-        alias = simulator.mll_round_slots(8, 10)
-    np.testing.assert_array_equal(plan.round_costs, alias)
     assert plan.rounds_completed == 10
     assert plan.idle_slots.sum() == 0
 
