@@ -14,7 +14,19 @@ Also cross-checks the engine's accounting: the barrier policy's per-round
 slot costs must equal the legacy `barrier_round_slots` draws for a shared
 numpy Generator.
 
+The **compression-ladder sweep** races every registered wire format
+(dense / bf16 / int8_ef / int4_ef / topk_ef / powersgd) over the SAME
+deadline plan and emits loss-at-budget next to bytes-on-wire (the
+per-strategy `wire_bytes` accounting hook): the Fig. 6 wall-clock axis
+plus the axis the paper's premise lives on — hub (DCN) traffic.  The
+``--gate`` claim pins the headline: int4_ef moves >= 4x fewer hub bytes
+than dense at matched loss.
+
+Writes BENCH_timeline.json at the repo root; ``--gate`` fails (and leaves
+the committed snapshot untouched) if any claim emits 0.
+
   PYTHONPATH=src python -m benchmarks.bench_timeline [--full | --smoke]
+      [--gate]
 """
 from __future__ import annotations
 
@@ -23,12 +35,18 @@ import time
 
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import DIM, CLASSES, BenchScale, emit, make_model
-from repro.core import baselines
+from repro.core import baselines, packing
 from repro.core.hierarchy import MLLSchedule
-from repro.core.simulator import SimConfig
+from repro.core.protocol import get_mixing, state_from_network
+from repro.core.simulator import SimConfig, replicate
 from repro.core.timeline import barrier_round_slots, run_timeline
 from repro.data.pipeline import make_classification
+
+# the ladder raced in the sweep: every registered wire format with a
+# distinct bytes-on-wire profile (two_stage/ppermute move dense's bytes)
+LADDER = ("dense", "bf16", "int8_ef", "int4_ef", "topk_ef", "powersgd")
 
 
 def _rates(n: int) -> np.ndarray:
@@ -92,17 +110,89 @@ def run(scale: BenchScale, model: str = "logreg",
     return out
 
 
-def main(full: bool = False, smoke: bool = False):
+def run_ladder(scale: BenchScale, seed: int = 0) -> dict:
+    """Compression-ladder sweep: every wire format over the SAME deadline
+    plan at an equal slot budget — loss-vs-slots AND bytes-on-wire."""
+    n = scale.workers
+    rates = _rates(n)
+    wps = [n // scale.subnets] * scale.subnets
+    tau, q = 8, 4
+    net, _ = baselines.mll_sgd("complete", wps, tau=tau, q=q,
+                               worker_rates=list(rates))
+    sched = MLLSchedule(tau=tau, q=q)
+    st = state_from_network(net)
+    data = make_classification(n, scale.per_worker, dim=DIM,
+                               num_classes=CLASSES, test_size=1024, seed=seed)
+    init, loss_fn, acc_fn = make_model("logreg")
+    spec = packing.pack_spec(replicate(init, n))
+
+    losses, wire = {}, {}
+    for name in LADDER:
+        cfg = SimConfig(eta=scale.eta, batch_size=scale.batch, mixing=name)
+        t0 = time.time()
+        res = run_timeline(loss_fn, acc_fn, init, data.worker_data(),
+                           data.full, data.test, net, sched,
+                           slots=scale.steps, policy="deadline", cfg=cfg,
+                           seed=seed)
+        hub_rounds = sum(1 for e in res.plan.events if e.kind == "hub")
+        wb = get_mixing(name).wire_bytes(st, spec)
+        losses[name] = float(res.train_loss[-1])
+        wire[name] = wb
+        emit(f"timeline/ladder/w{n}/{name}/loss_at_budget",
+             losses[name], t0=t0,
+             extra=f"slots={scale.steps} acc={res.test_acc[-1]:.3f} "
+                   f"hub_rounds={hub_rounds}")
+        emit(f"timeline/ladder/w{n}/{name}/wire_bytes_per_hub_round", wb)
+        emit(f"timeline/ladder/w{n}/{name}/wire_bytes_total",
+             wb * hub_rounds)
+
+    # headline: int4_ef crosses the hub boundary with >= 4x fewer bytes
+    # than dense while matching its loss at the same slot budget
+    ratio = wire["dense"] / wire["int4_ef"]
+    matched = losses["int4_ef"] <= losses["dense"] + 0.02
+    emit(f"timeline/ladder/w{n}/claim/int4_wire_reduction_ge_4x_matched_loss",
+         int(ratio >= 4.0 and matched),
+         extra=f"ratio={ratio:.2f} loss_dense={losses['dense']:.4f} "
+               f"loss_int4={losses['int4_ef']:.4f}")
+    # bf16 halves the wire for free (stateless); sanity-pin it too
+    emit(f"timeline/ladder/w{n}/claim/bf16_halves_wire_matched_loss",
+         int(wire["bf16"] * 2 == wire["dense"]
+             and losses["bf16"] <= losses["dense"] + 0.02))
+    return {"losses": losses, "wire": wire}
+
+
+def check_gate() -> int:
+    """Fail when any claim emitted 0 (all claims in this bench are 0/1)."""
+    failures = [name for name, rec in common.bench_records("timeline").items()
+                if "/claim/" in name and not rec["value"]]
+    for f in failures:
+        print(f"GATE FAIL {f}", flush=True)
+    return 1 if failures else 0
+
+
+def main(full: bool = False, smoke: bool = False, gate: bool = False) -> int:
+    common.begin_bench("timeline")
     if smoke:
         run(BenchScale(workers=8, subnets=2, per_worker=128, steps=256),
             model="logreg")
-        return
-    # Fig. 6 at 20 and 100 workers
-    for workers, subnets in ((20, 4), (100, 10)):
-        scale = BenchScale(workers=workers, subnets=subnets,
-                           steps=8192 if full else 1024)
-        for model in ("logreg", "mlp") if full else ("logreg",):
-            run(scale, model)
+        run_ladder(BenchScale(workers=8, subnets=2, per_worker=128,
+                              steps=256))
+    else:
+        # Fig. 6 at 20 and 100 workers
+        for workers, subnets in ((20, 4), (100, 10)):
+            scale = BenchScale(workers=workers, subnets=subnets,
+                               steps=8192 if full else 1024)
+            for model in ("logreg", "mlp") if full else ("logreg",):
+                run(scale, model)
+        run_ladder(BenchScale(workers=20, subnets=4,
+                              steps=8192 if full else 1024))
+    common.end_bench("timeline")
+    rc = check_gate() if gate else 0
+    if rc:
+        print("GATE FAIL: BENCH_timeline.json left untouched", flush=True)
+        return rc
+    common.write_bench_json("timeline", common.bench_records("timeline"))
+    return rc
 
 
 if __name__ == "__main__":
@@ -111,5 +201,8 @@ if __name__ == "__main__":
                     help="paper-scale slot budgets + both models")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny nightly-CI smoke (8 workers, 256 slots)")
+    ap.add_argument("--gate", action="store_true",
+                    help="fail if any claim (Fig. 6 orderings, ladder "
+                         "wire-reduction at matched loss) emits 0")
     args = ap.parse_args()
-    main(full=args.full, smoke=args.smoke)
+    raise SystemExit(main(full=args.full, smoke=args.smoke, gate=args.gate))

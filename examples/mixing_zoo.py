@@ -15,9 +15,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import MLLSchedule, SimConfig, baselines, simulate
-from repro.core.protocol import (MixingStrategy, available_mixing, register,
+from repro.core import packing
+from repro.core.protocol import (MixingStrategy, available_mixing,
+                                 describe_mixing, get_mixing, register,
+                                 state_from_network,
                                  subnet_average_two_stage,
                                  hub_average_two_stage)
+from repro.core.simulator import replicate
 from repro.data.pipeline import make_classification
 
 
@@ -55,20 +59,25 @@ def acc_fn(params, batch):
 init = {"w": jnp.zeros((16, 4)), "b": jnp.zeros((4,))}
 
 # --- sweep the registry ----------------------------------------------------
-print(f"registered mixing strategies: {', '.join(available_mixing())}")
-print(f"{'mixing':>10s} {'inner_opt':>9s} {'final loss':>10s} {'test acc':>8s}")
+print(describe_mixing())
+print()
+st = state_from_network(net)
+spec = packing.pack_spec(replicate(init, net.num_workers))
+print(f"{'mixing':>10s} {'inner_opt':>9s} {'final loss':>10s} "
+      f"{'test acc':>8s} {'hub B/round':>11s}")
 for mixing in available_mixing():
     if mixing == "dense":
         opts = ("sgd", "momentum")       # show the optimizer axis once
     else:
         opts = ("sgd",)
+    wire = get_mixing(mixing).wire_bytes(st, spec)
     for opt in opts:
         res = simulate(loss_fn, acc_fn, init, data.worker_data(), data.full,
                        data.test, net, sched, steps=256,
                        cfg=SimConfig(eta=0.1, batch_size=16, eval_every=256,
                                      mixing=mixing, inner_opt=opt))
         print(f"{mixing:>10s} {opt:>9s} {res.train_loss[-1]:10.4f} "
-              f"{res.test_acc[-1]:8.3f}")
+              f"{res.test_acc[-1]:8.3f} {wire:11d}")
 
 print("\nevery row above ran the SAME engine — a strategy is ~10 lines of "
       "registration,\nnot a cross-cutting edit (see Bf16HubMixing in this "

@@ -100,6 +100,44 @@ def shard_spec(spec: PackSpec, num_shards: int) -> PackSpec:
     return PackSpec(spec.treedef, w, spec.total_cols, slots)
 
 
+@dataclasses.dataclass(frozen=True)
+class PackChunk:
+    """One contiguous column range [lo, hi) of the packed lane axis."""
+    lo: int
+    hi: int
+
+    @property
+    def size(self) -> int:
+        return self.hi - self.lo
+
+
+def chunk_views(spec: PackSpec, num_chunks: int) -> tuple[PackChunk, ...]:
+    """Split the packed lane axis [0, total_cols) into at most
+    ``num_chunks`` contiguous `PackChunk` views for chunked (overlapped)
+    mixing: chunk i's operator contraction touches only its own columns, so
+    an executor can mix chunk i while chunk i+1 is still being produced —
+    the double-buffered FSDP-stream idiom.
+
+    Chunk boundaries land on 128-column multiples (the TPU lane tile), so
+    each chunk's kernel launch tiles cleanly and pads only the final
+    chunk's tail; small buffers yield fewer (possibly one) chunks.  Because
+    every packed-path contraction reduces over the WORKER axis only, each
+    column's arithmetic is independent of the chunking — chunked and
+    single-launch execution agree bit for bit on the packed buffer.
+    """
+    if num_chunks < 1:
+        raise ValueError(f"num_chunks must be >= 1, got {num_chunks}")
+    c = spec.total_cols
+    lanes = -(-c // 128)                 # 128-lane groups in the buffer
+    per = -(-lanes // num_chunks) * 128  # columns per chunk, lane-aligned
+    chunks, lo = [], 0
+    while lo < c:
+        hi = min(lo + per, c)
+        chunks.append(PackChunk(lo, hi))
+        lo = hi
+    return tuple(chunks)
+
+
 def all_f32(stacked: PyTree) -> bool:
     """True when every leaf is float32 — the gating condition for the flat
     fast paths.  pack/unpack round-trips and the packed Pallas kernel are

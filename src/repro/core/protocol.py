@@ -8,7 +8,10 @@ same three pluggable pieces:
 
   1. a **MixingStrategy** from the registry below — how the subnet (V) and
      hub (Z) averaging rounds are realised (dense einsum, grouped two-stage,
-     circulant ppermute rolls, int8 wire format, int8 + error feedback, ...),
+     circulant ppermute rolls) and what the hub wire carries (the
+     compression ladder: bf16, int8, int8/int4 + error feedback, top-k
+     sparsification, low-rank PowerSGD factors — each with a `wire_bytes`
+     accounting hook the benchmarks plot against loss),
   2. an **inner optimizer** (`repro.optim.optimizers.Optimizer`) applied
      per worker under the Bernoulli(p_i) gate of Eq. (3) — a gated worker
      skips the step entirely: params AND optimizer state stay frozen,
@@ -394,14 +397,25 @@ def hub_average_ppermute_spmd(local: PyTree, st: MLLState, spmd: SpmdAxis,
     return _hub_spmd_rolls(local, st, spmd, mix_dtype, terms)
 
 
+def _sym_quantize(x: jnp.ndarray, axes: tuple[int, ...],
+                  levels: int) -> tuple:
+    """Symmetric per-hub integer quantization: scale = max|x| / ``levels``
+    over all dims except the leading hub dim, values clipped to
+    [-levels, levels].  ``levels=127`` is the int8 wire, ``levels=7`` the
+    int4 wire (stored int8 in simulation — jax carries no packed int4
+    buffers — but only 4 bits of information survive, which is what the
+    `wire_bytes` accounting charges)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axes, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / float(levels)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -levels, levels
+                 ).astype(jnp.int8)
+    return q, scale
+
+
 def _int8_quantize(x: jnp.ndarray, axes: tuple[int, ...]) -> tuple:
     """Symmetric per-hub int8 quantization: scale = max|x| / 127 over all
     dims except the leading hub dim."""
-    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axes, keepdims=True)
-    scale = jnp.maximum(amax, 1e-12) / 127.0
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
-                 ).astype(jnp.int8)
-    return q, scale
+    return _sym_quantize(x, axes, 127)
 
 
 def _circulant_coeffs(st: MLLState) -> np.ndarray:
@@ -490,14 +504,26 @@ def init_error_feedback(stacked_params: PyTree) -> PyTree:
                         stacked_params)
 
 
-def hub_average_int8_ef(stacked: PyTree, ef: PyTree, st: MLLState,
-                        ) -> tuple[PyTree, PyTree]:
-    """int8 hub mixing WITH error feedback: the quantization residual of
-    each hub round is added back before the next round's quantization, so
-    the long-run averaging is unbiased (Karimireddy et al. 2019 style).
+def _split_pairs(pairs: PyTree) -> tuple[PyTree, PyTree]:
+    """Split a tree of (a, b) leaf tuples into two trees."""
+    first = jax.tree.map(lambda t: t[0], pairs,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    second = jax.tree.map(lambda t: t[1], pairs,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return first, second
+
+
+def hub_average_intq_ef(stacked: PyTree, ef: PyTree, st: MLLState, *,
+                        levels: int = 127) -> tuple[PyTree, PyTree]:
+    """Integer-quantized hub mixing WITH error feedback: the quantization
+    residual of each hub round is added back before the next round's
+    quantization, so the long-run averaging is unbiased (Karimireddy et al.
+    2019 style).  ``levels=127`` is the int8 wire, ``levels=7`` the int4
+    wire (int4 values + one f32 scale per hub model per leaf).
 
     Returns (mixed params, new residual state).  Wire format identical to
-    `hub_average_int8` (int8 rolls); only local state is added."""
+    `hub_average_int8` modulo the level count (integer rolls); only local
+    state is added."""
     d, nd = _grouped_dims(st)
     v = st.v_weights.reshape(d, nd)
     coeffs = _circulant_coeffs(st)
@@ -506,7 +532,7 @@ def hub_average_int8_ef(stacked: PyTree, ef: PyTree, st: MLLState,
         xg = x.astype(jnp.float32).reshape((d, nd) + x.shape[1:])
         eg = e.reshape((d, nd) + x.shape[1:])
         z = jnp.einsum("dn,dn...->d...", v, xg + eg)      # compensated avg
-        q, scale = _int8_quantize(z, tuple(range(1, z.ndim)))
+        q, scale = _sym_quantize(z, tuple(range(1, z.ndim)), levels)
         deq_own = q.astype(jnp.float32) * scale
         resid = z - deq_own                                # what the wire lost
         y = None
@@ -514,7 +540,7 @@ def hub_average_int8_ef(stacked: PyTree, ef: PyTree, st: MLLState,
             if abs(float(c)) < 1e-12:
                 continue
             if o:
-                qo = jnp.roll(q, -o, axis=0)               # int8 on the wire
+                qo = jnp.roll(q, -o, axis=0)               # ints on the wire
                 so = jnp.roll(scale, -o, axis=0)
                 term = float(c) * (qo.astype(jnp.float32) * so)
             else:
@@ -529,12 +555,205 @@ def hub_average_int8_ef(stacked: PyTree, ef: PyTree, st: MLLState,
         return (out.reshape(x.shape).astype(x.dtype),
                 new_e.reshape(x.shape).astype(jnp.float32))
 
-    pairs = jax.tree.map(mix, stacked, ef)
-    first = jax.tree.map(lambda t: t[0], pairs,
-                         is_leaf=lambda t: isinstance(t, tuple))
-    second = jax.tree.map(lambda t: t[1], pairs,
-                          is_leaf=lambda t: isinstance(t, tuple))
-    return first, second
+    return _split_pairs(jax.tree.map(mix, stacked, ef))
+
+
+def hub_average_int8_ef(stacked: PyTree, ef: PyTree, st: MLLState,
+                        ) -> tuple[PyTree, PyTree]:
+    """`hub_average_intq_ef` at the int8 wire (levels=127)."""
+    return hub_average_intq_ef(stacked, ef, st, levels=127)
+
+
+def hub_average_bf16(stacked: PyTree, st: MLLState) -> PyTree:
+    """bf16-wire hub mixing: the subnet average stays full precision (ICI
+    is cheap), neighbour hub models cross the pod boundary as bf16 —
+    halving DCN bytes vs f32 with no extra state.
+
+    Structured as receiver-weighted ROLLS of the bf16 wire buffer (general
+    H, like `hub_average_two_stage`); the o=0 term keeps the hub's OWN
+    model in f32 (it never touches the wire), rolled terms dequantize
+    bf16 -> f32 before the weighted accumulation.  Term-for-term the
+    arithmetic of `hub_average_bf16_spmd`, whose `ppermute` carries the
+    bf16 buffers."""
+    d, nd = _grouped_dims(st)
+    v = st.v_weights.reshape(d, nd)
+    e = np.arange(d)
+
+    def mix(x):
+        xg = x.astype(jnp.float32).reshape((d, nd) + x.shape[1:])
+        z = _product_mean(v, xg)
+        wire = z.astype(jnp.bfloat16)                      # the wire buffer
+        h = st.h.astype(jnp.float32)
+        y = None
+        for o in range(d):
+            w = h[(e + o) % d, e].reshape((d,) + (1,) * (z.ndim - 1))
+            zo = z if o == 0 else jnp.roll(wire, -o, axis=0
+                                           ).astype(jnp.float32)
+            term = w * zo
+            y = term if y is None else y + term
+        out = jnp.broadcast_to(y[:, None], xg.shape).reshape(x.shape)
+        return out.astype(x.dtype)
+    return jax.tree.map(mix, stacked)
+
+
+def hub_average_bf16_spmd(local: PyTree, st: MLLState,
+                          spmd: SpmdAxis) -> PyTree:
+    """`hub_average_bf16` under shard_map: the `ppermute` rolls carry the
+    BF16 wire buffers (the collective moves 2 bytes/element), dequantized
+    to f32 on arrival — add-for-add the vmap accumulation (which groups in
+    f32 regardless of the param dtype, hence mix_dtype="float32" here)."""
+    sps = grouped_spmd_layout(st, spmd)
+    if sps == 0:
+        return hub_average_bf16(local, st)
+    d, _ = _grouped_dims(st)
+    e = np.arange(d)
+
+    def terms(dtype, z, roll):
+        wire = z.astype(jnp.bfloat16)
+        h = st.h.astype(jnp.float32)
+        sub = jax.lax.axis_index(spmd.name) // sps     # this shard's subnet
+        for o in range(d):
+            c = jnp.take(h[(e + o) % d, e], sub)
+            yield c * (z if o == 0
+                       else roll(wire, o).astype(jnp.float32))
+    return _hub_spmd_rolls(local, st, spmd, "float32", terms)
+
+
+def _topk_count(cols: int, ratio: float) -> int:
+    """Entries kept per hub model for a leaf with ``cols`` elements."""
+    return max(1, min(cols, int(-(-cols * ratio // 1))))
+
+
+def _topk_sparsify(z: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Dense copy of (D, ...) hub models keeping only each model's k
+    largest-|.| entries (the wire carries k (value, index) pairs)."""
+    d = z.shape[0]
+    flat = z.reshape(d, -1)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    picked = jnp.take_along_axis(flat, idx, axis=1)
+    rows = jnp.arange(d)[:, None]
+    return jnp.zeros_like(flat).at[rows, idx].set(picked).reshape(z.shape)
+
+
+def hub_average_topk_ef(stacked: PyTree, ef: PyTree, st: MLLState, *,
+                        ratio: float, momentum: float,
+                        ) -> tuple[PyTree, PyTree]:
+    """Top-k sparsified hub mixing with momentum error feedback: each hub
+    model crosses the wire as its k = ceil(ratio * size) largest-magnitude
+    entries per leaf ((value, index) pairs); the dropped mass decays into
+    the residual buffer with factor ``momentum`` and is compensated into
+    the next round's input.  General H (the dequantized sparse models mix
+    through `_roll_mix`)."""
+    d, nd = _grouped_dims(st)
+    v = st.v_weights.reshape(d, nd)
+
+    def mix(x, e):
+        xg = x.astype(jnp.float32).reshape((d, nd) + x.shape[1:])
+        eg = e.reshape((d, nd) + x.shape[1:])
+        u = jnp.einsum("dn,dn...->d...", v, xg + eg)      # compensated avg
+        cols = 1
+        for dim in x.shape[1:]:
+            cols *= dim
+        s = _topk_sparsify(u, _topk_count(cols, ratio))
+        resid = u - s                                      # dropped mass
+        y = _roll_mix(st.h.astype(jnp.float32), s)
+        out = jnp.broadcast_to(y[:, None], (d, nd) + x.shape[1:])
+        new_e = jnp.broadcast_to((momentum * resid)[:, None],
+                                 (d, nd) + x.shape[1:])
+        return (out.reshape(x.shape).astype(x.dtype),
+                new_e.reshape(x.shape).astype(jnp.float32))
+
+    return _split_pairs(jax.tree.map(mix, stacked, ef))
+
+
+def _powersgd_approx(m: jnp.ndarray, q: jnp.ndarray) -> tuple:
+    """One warm-started PowerSGD iteration per hub model.
+
+    ``m`` (D, n, c) matrices, ``q`` (D, c, r) warm-started right factors.
+    P = M Q orthonormalized (batched reduced QR), Q' = M^T P, and the
+    rank-r reconstruction is P Q'^T = P P^T M — the projection of M's
+    columns onto span(P), exact whenever rank(M) <= r (Vogels et al. 2019).
+    Returns (approx (D, n, c), Q' (D, c, r))."""
+    p = jnp.einsum("dnc,dcr->dnr", m, q)
+    p, _ = jnp.linalg.qr(p)                           # orthonormal columns
+    q_new = jnp.einsum("dnc,dnr->dcr", m, p)
+    return jnp.einsum("dnr,dcr->dnc", p, q_new), q_new
+
+
+def init_powersgd_state(stacked_params: PyTree, rank: int) -> dict:
+    """PowerSGD mixing state: EF residuals + warm-started right factors.
+
+    Matrix leaves (per-worker ndim >= 2, flattened to (n, c)) get a
+    per-worker (c, r_eff) Gaussian Q with r_eff = min(rank, n, c),
+    deterministic per leaf position; vector/scalar leaves cross the wire
+    uncompressed and carry an empty (W, 0) placeholder so the state tree
+    keeps one leaf per param leaf (lax.switch needs a fixed structure)."""
+    ef = init_error_feedback(stacked_params)
+    leaves, treedef = jax.tree.flatten(stacked_params)
+    qs = []
+    for i, x in enumerate(leaves):
+        w = x.shape[0]
+        if x.ndim >= 3:
+            n = x.shape[1]
+            c = 1
+            for dim in x.shape[2:]:
+                c *= dim
+            r = min(rank, n, c)
+            qi = jax.random.normal(jax.random.PRNGKey(i), (c, r), jnp.float32)
+            qs.append(jnp.broadcast_to(qi[None], (w, c, r)))
+        else:
+            qs.append(jnp.zeros((w, 0), jnp.float32))
+    return {"ef": ef, "q": jax.tree.unflatten(treedef, qs)}
+
+
+def hub_average_powersgd(stacked: PyTree, ef: PyTree, q: PyTree,
+                         st: MLLState) -> tuple[PyTree, PyTree, PyTree]:
+    """Low-rank hub mixing with warm-started PowerSGD factors and error
+    feedback (Vogels et al. 2019 adapted to model mixing): each hub's
+    compensated model crosses the wire as rank-r factors P (n x r) and
+    Q (c x r) per matrix leaf; the low-rank residual feeds back next round
+    and Q' warm-starts the next power iteration.  Vector/scalar leaves are
+    sent exact (their EF residual stays zero).  General H via `_roll_mix`.
+
+    Returns (mixed params, new EF residuals, new Q factors)."""
+    d, nd = _grouped_dims(st)
+    v = st.v_weights.reshape(d, nd)
+
+    def mix(x, e, qv):
+        xg = x.astype(jnp.float32).reshape((d, nd) + x.shape[1:])
+        eg = e.reshape((d, nd) + x.shape[1:])
+        u = jnp.einsum("dn,dn...->d...", v, xg + eg)      # compensated avg
+        if x.ndim >= 3 and qv.size:
+            n = x.shape[1]
+            c = qv.shape[1]
+            m = u.reshape(d, n, c)
+            qh = qv.reshape((d, nd) + qv.shape[1:])[:, 0]  # (d, c, r)
+            approx, q_new = _powersgd_approx(m, qh)
+            s = approx.reshape(u.shape)
+            resid = u - s                                  # low-rank error
+            new_q = jnp.broadcast_to(
+                q_new[:, None], (d, nd) + q_new.shape[1:]).reshape(qv.shape)
+        else:
+            s, resid, new_q = u, jnp.zeros_like(u), qv     # exact wire
+        y = _roll_mix(st.h.astype(jnp.float32), s)
+        out = jnp.broadcast_to(y[:, None], (d, nd) + x.shape[1:])
+        new_e = jnp.broadcast_to(resid[:, None], (d, nd) + x.shape[1:])
+        return (out.reshape(x.shape).astype(x.dtype),
+                new_e.reshape(x.shape).astype(jnp.float32),
+                new_q.astype(jnp.float32))
+
+    trip = jax.tree.map(mix, stacked, ef, q)
+    is_leaf = lambda t: isinstance(t, tuple)   # noqa: E731
+    return (jax.tree.map(lambda t: t[0], trip, is_leaf=is_leaf),
+            jax.tree.map(lambda t: t[1], trip, is_leaf=is_leaf),
+            jax.tree.map(lambda t: t[2], trip, is_leaf=is_leaf))
+
+
+def _hub_edges(st: MLLState) -> int:
+    """Directed hub-graph edges that carry wire traffic: nonzero
+    off-diagonal entries of H (a hub's own model never leaves the pod)."""
+    h = np.abs(np.asarray(st.h)) > 1e-12
+    return int(h.sum() - np.diag(h).sum())
 
 
 # ------------------------------------------------------------------- registry
@@ -551,9 +770,28 @@ class MixingStrategy:
     # strategies with a collective lowering (the ``*_spmd`` methods) set
     # this True; the SPMD harness refuses meshes for the rest up front
     spmd_capable: bool = False
+    # one-line wire-format description (``--mixing list`` / mixing_zoo)
+    wire_format: str = "f32 hub models (4 B/elem; mix_dtype overrides)"
 
     def __init__(self, mix_dtype: str | None = None):
         self.mix_dtype = mix_dtype
+
+    # ---- wire accounting (benchmarks plot bytes-on-wire per strategy)
+    def hub_payload_bytes(self, st: MLLState, spec) -> int:
+        """Bytes ONE hub model costs on the wire under this strategy's
+        format, for a stacked tree laid out by ``spec`` (a
+        `packing.PackSpec`).  Default: every element at mix dtype."""
+        dt = jnp.dtype(self.mix_dtype) if self.mix_dtype else jnp.dtype(
+            jnp.float32)
+        return int(dt.itemsize) * spec.total_cols
+
+    def wire_bytes(self, st: MLLState, spec) -> int:
+        """Hub-boundary (DCN) bytes for ONE hub averaging round: one
+        `hub_payload_bytes` payload per directed hub edge (`_hub_edges`).
+        Subnet rounds ride intra-pod ICI and are deliberately not counted —
+        the ladder compresses the scarce hub hop, matching the paper's
+        premise that hub exchange dominates."""
+        return _hub_edges(st) * self.hub_payload_bytes(st, spec)
 
     # ---- stateless interface
     def subnet(self, stacked: PyTree, st: MLLState) -> PyTree:
@@ -630,6 +868,21 @@ def available_mixing() -> tuple[str, ...]:
     return tuple(sorted(MIXING_REGISTRY))
 
 
+def describe_mixing() -> str:
+    """One line per registered strategy: name, SPMD capability, wire format.
+
+    The text behind ``--mixing list`` on the launchers and the mixing-zoo
+    example — the human-readable face of the compression ladder."""
+    width = max(len(n) for n in MIXING_REGISTRY)
+    lines = []
+    for name in available_mixing():
+        cls = MIXING_REGISTRY[name]
+        spmd = "mesh" if cls.spmd_capable else "vmap"
+        lines.append(f"  {name:<{width}}  [{spmd}]  {cls.wire_format}")
+    return "registered mixing strategies (wire format on hub edges):\n" + \
+        "\n".join(lines)
+
+
 @register("dense")
 class DenseMixing(MixingStrategy):
     """The paper's matrices verbatim: X V and X Z as W x W einsums.  Works
@@ -638,6 +891,7 @@ class DenseMixing(MixingStrategy):
     gather+contract: all-gather the worker axis, einsum into this shard's
     output rows only (bit-identical — same contraction per output row)."""
     spmd_capable = True
+    wire_format = "f32 W x W contraction; full-precision models on every edge"
 
     def subnet(self, stacked, st):
         return subnet_average_dense(stacked, st, self.mix_dtype)
@@ -659,6 +913,7 @@ class TwoStageMixing(MixingStrategy):
     subnet mean is an intra-subnet grouped `psum`, the hub stage
     receiver-weighted `ppermute` rolls."""
     spmd_capable = True
+    wire_format = "f32 hub models as rolls (4 B/elem; mix_dtype overrides)"
 
     def subnet(self, stacked, st):
         return subnet_average_two_stage(stacked, st, self.mix_dtype)
@@ -682,6 +937,7 @@ class PPermuteMixing(TwoStageMixing):
     """Circulant-H hub mixing as coefficient-weighted rolls: DCN bytes scale
     with hub-graph degree, not D.  Subnet rounds stay two-stage.  SPMD
     lowering: one `ppermute` per nonzero circulant coefficient."""
+    wire_format = "f32 hub models, one permute per nonzero circulant coeff"
 
     def hub(self, stacked, st):
         return hub_average_ppermute(stacked, st, self.mix_dtype)
@@ -704,19 +960,25 @@ class Int8Mixing(TwoStageMixing):
     a typed collective path so the permute carries int8 buffers, not the
     f32 rolls the inherited lowering would silently emit."""
     spmd_capable = False
+    wire_format = "int8 values + one f32 scale per hub model per leaf (biased)"
 
     def hub(self, stacked, st):
         return hub_average_int8(stacked, st)
 
     def subnet_spmd(self, local, st, spmd):
         raise NotImplementedError(
-            f"mixing={self.name!r} has no SPMD lowering (int8 wire format)")
+            f"mixing={self.name!r} has no SPMD lowering (compressed wire "
+            f"format needs typed collectives); strategies that run on a "
+            f"mesh: {spmd_capable_mixing()}")
 
     hub_spmd = subnet_spmd
 
+    def hub_payload_bytes(self, st, spec):
+        return sum(s.size + 4 for s in spec.slots)
+
 
 @register("int8_ef")
-class Int8EFMixing(TwoStageMixing):
+class Int8EFMixing(Int8Mixing):
     """int8 hub mixing + error feedback: per-worker f32 residual buffers
     make the long-run averaging unbiased.  Stateful — the engine carries the
     residuals next to the params (same worker layout/sharding).  As with
@@ -724,24 +986,121 @@ class Int8EFMixing(TwoStageMixing):
     ``int8``, NOT spmd-capable until the wire carries typed int8
     collectives."""
     spmd_capable = False
-
-    def subnet_spmd(self, local, st, spmd):
-        raise NotImplementedError(
-            f"mixing={self.name!r} has no SPMD lowering (int8 wire format)")
-
-    hub_spmd = subnet_spmd
+    levels = 127               # quantization levels of the integer wire
+    wire_format = "int8 values + f32 scales, error-feedback residuals"
 
     def init_state(self, stacked_params):
         return init_error_feedback(stacked_params)
 
     def hub(self, stacked, st):
-        out, _ = hub_average_int8_ef(stacked, init_error_feedback(stacked), st)
+        out, _ = hub_average_intq_ef(stacked, init_error_feedback(stacked),
+                                     st, levels=self.levels)
         return out
 
     def hub_with_state(self, stacked, st, state):
         if isinstance(state, tuple) and not state:   # caller without state
             state = init_error_feedback(stacked)
-        return hub_average_int8_ef(stacked, state, st)
+        return hub_average_intq_ef(stacked, state, st, levels=self.levels)
+
+
+@register("int4_ef")
+class Int4EFMixing(Int8EFMixing):
+    """int4 hub wire (2 elements/byte + one f32 scale per hub model per
+    leaf) with the same error-feedback compensation as ``int8_ef``: the
+    coarser 15-level grid loses more per round, EF returns it next round.
+    Simulation carries the 4-bit values in int8 buffers (jax has no packed
+    int4 arrays); `hub_payload_bytes` charges the 4 bits that matter."""
+    levels = 7
+    wire_format = "int4 values (2 elem/byte) + f32 scales, EF residuals"
+
+    def hub_payload_bytes(self, st, spec):
+        return sum((s.size + 1) // 2 + 4 for s in spec.slots)
+
+
+@register("bf16")
+class Bf16Mixing(TwoStageMixing):
+    """bf16 hub wire: neighbour hub models cross the pod boundary as bf16
+    (half the DCN bytes of f32), dequantized on arrival; the receiver's OWN
+    hub model stays f32.  Stateless and unbiased enough in practice that no
+    EF buffer is carried (bf16 keeps f32's exponent range; the mantissa
+    truncation is ~3 decimal digits).  First compressed rung WITH a real
+    SPMD lowering: the `ppermute` rolls carry the bf16 wire buffers."""
+    spmd_capable = True
+    wire_format = "bf16 hub models (2 B/elem), stateless"
+
+    def hub(self, stacked, st):
+        return hub_average_bf16(stacked, st)
+
+    def hub_spmd(self, local, st, spmd):
+        return hub_average_bf16_spmd(local, st, spmd)
+
+    def hub_payload_bytes(self, st, spec):
+        return 2 * spec.total_cols
+
+
+@register("topk_ef")
+class TopKEFMixing(Int8Mixing):
+    """Top-k sparsified hub wire with momentum error feedback: each hub
+    model crosses as its k = ceil(size / 32) largest-|.| entries per leaf,
+    sent as (f32 value, i32 index) pairs; dropped mass decays into the
+    residual with factor ``ef_momentum`` and compensates the next round."""
+    spmd_capable = False
+    k_ratio = 1 / 32           # fraction of entries kept per leaf
+    ef_momentum = 0.9          # residual decay (plain EF would be 1.0)
+    wire_format = "top-k (f32 value, i32 index) pairs, momentum EF residuals"
+
+    def init_state(self, stacked_params):
+        return init_error_feedback(stacked_params)
+
+    def hub(self, stacked, st):
+        out, _ = hub_average_topk_ef(stacked, init_error_feedback(stacked),
+                                     st, ratio=self.k_ratio,
+                                     momentum=self.ef_momentum)
+        return out
+
+    def hub_with_state(self, stacked, st, state):
+        if isinstance(state, tuple) and not state:   # caller without state
+            state = init_error_feedback(stacked)
+        return hub_average_topk_ef(stacked, state, st, ratio=self.k_ratio,
+                                   momentum=self.ef_momentum)
+
+    def hub_payload_bytes(self, st, spec):
+        return sum(8 * _topk_count(s.size, self.k_ratio) for s in spec.slots)
+
+
+@register("powersgd")
+class PowerSGDMixing(Int8Mixing):
+    """Low-rank hub wire: rank-r PowerSGD factors (P n x r, Q c x r, both
+    f32) per matrix leaf, warm-started Q + EF residual; vector/scalar
+    leaves sent exact.  State is {"ef": residual tree, "q": factor tree}."""
+    spmd_capable = False
+    rank = 2                   # target rank (clamped to min(n, c) per leaf)
+    wire_format = "rank-r PowerSGD factors per matrix leaf, EF residuals"
+
+    def init_state(self, stacked_params):
+        return init_powersgd_state(stacked_params, self.rank)
+
+    def hub(self, stacked, st):
+        out, _ = self.hub_with_state(stacked, st, ())
+        return out
+
+    def hub_with_state(self, stacked, st, state):
+        if isinstance(state, tuple) and not state:   # caller without state
+            state = init_powersgd_state(stacked, self.rank)
+        params, ef, q = hub_average_powersgd(stacked, state["ef"],
+                                             state["q"], st)
+        return params, {"ef": ef, "q": q}
+
+    def hub_payload_bytes(self, st, spec):
+        total = 0
+        for s in spec.slots:
+            if len(s.shape) >= 3:          # (W, n, ...) matrix leaf
+                n = s.shape[1]
+                c = s.size // n
+                total += 4 * min(self.rank, n, c) * (n + c)
+            else:
+                total += 4 * s.size        # exact wire
+        return total
 
 
 # ------------------------------------------------------------ engine: mixing

@@ -80,6 +80,10 @@ class SimConfig:
     kernel: str = "xla"           # "xla" | "pallas" (fused update+mix)
     block_c: int = 512            # pallas lane-block size (raise on CPU:
                                   # interpret mode pays per-grid-step cost)
+    overlap: str = "none"         # "none" | "chunked": mix the packed buffer
+                                  # chunk-by-chunk so hub exchange overlaps
+                                  # local compute (event executor only)
+    overlap_chunks: int = 4       # lane chunks per mixing event
 
 
 @dataclasses.dataclass
@@ -123,6 +127,33 @@ def _check_kernel(cfg: SimConfig, *, structured_ok: bool = False) -> None:
             f"mix_dtype=None, and mixing in {mixings} (the structured "
             "two_stage/ppermute fusions run through the event-sparse "
             "timeline executor only)")
+
+
+def _check_overlap(cfg: SimConfig) -> None:
+    """Validate the chunked-overlap knob (shared by every executor).
+
+    ``overlap="chunked"`` fuses the plain-SGD update with a dense (W, W)
+    operator contraction chunk-by-chunk over the PACKED buffer, so it
+    carries the Pallas path's restrictions: inner_opt='sgd' (the fused
+    u = x - eta*theta*g IS the update), mix_dtype=None, and a mixing
+    strategy whose rounds are expressible as dense operators
+    (dense/two_stage/ppermute — the compressed-wire ladder reshapes what
+    crosses the wire and cannot be cut along the lane axis)."""
+    if cfg.overlap not in ("none", "chunked"):
+        raise ValueError(f"unknown overlap {cfg.overlap!r}; "
+                         "expected none|chunked")
+    if cfg.overlap != "chunked":
+        return
+    if cfg.overlap_chunks < 1:
+        raise ValueError(f"overlap_chunks must be >= 1, "
+                         f"got {cfg.overlap_chunks}")
+    if (cfg.inner_opt != "sgd" or cfg.mix_dtype is not None
+            or cfg.mixing not in ("dense", "two_stage", "ppermute")):
+        raise ValueError(
+            "overlap='chunked' fuses the plain-SGD update with a dense "
+            "(W, W) operator contraction per packed-lane chunk; it "
+            "requires inner_opt='sgd', mix_dtype=None, and mixing in "
+            "('dense', 'two_stage', 'ppermute')")
 
 
 def make_step_fn(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],

@@ -41,9 +41,10 @@ Execution reuses the protocol engine end to end: `protocol.MixingStrategy`
 optimizer, per-worker state frozen on idle slots), and the simulator's
 carry layout (`init_sim_carry`), so with p_i = 1 the barrier policy
 reproduces the lock-step trajectory bit for bit.  Policies that mix a
-strict subset of workers (``"gossip"``) build masked dense operators and
-therefore require ``mixing="dense"`` — the same restriction unequal-size
-sub-networks already carry.
+strict subset of workers (``"gossip"``) build masked dense operators;
+those events execute at full precision under EVERY registered mixing
+strategy (a strict-subset round has no compressed wire form), while full
+V/Z rounds keep the strategy's wire format.
 
 Execution is **event-sparse** by default (`EventExecutor`): the slot scan
 is segmented at the plan's mixing events, so the (vast majority of)
@@ -73,8 +74,8 @@ import numpy as np
 
 from repro.core import packing, protocol
 from repro.core.hierarchy import MLLSchedule, MultiLevelNetwork
-from repro.core.simulator import SimConfig, _check_kernel, apply_operator, \
-    init_sim_carry, replicate, weighted_average
+from repro.core.simulator import SimConfig, _check_kernel, _check_overlap, \
+    apply_operator, init_sim_carry, replicate, weighted_average
 
 PyTree = Any
 
@@ -422,7 +423,8 @@ class NeighborReadyGossipPolicy(ReadinessPolicy):
     training (readiness is sticky, never blocking).
 
     All events mix strict subsets of workers, so execution goes through
-    per-slot dense operators (``mixing="dense"``).
+    per-slot dense operators at full precision (compressed-wire strategies
+    keep their format for full V/Z rounds only).
     """
     needs_dense = True
 
@@ -525,6 +527,65 @@ def apply_event_operator(stacked: PyTree, op: jnp.ndarray,
         lambda x: jnp.einsum("ij,i...->j...", op.astype(x.dtype), x), stacked)
 
 
+def chunked_update_mix(stacked: PyTree, grads: PyTree, op: jnp.ndarray,
+                       theta: jnp.ndarray, eta: float,
+                       num_chunks: int) -> PyTree:
+    """XLA chunked fused update+mix: the ``overlap="chunked"`` event body.
+
+    Params and grads pack into (W, sum C) f32 buffers; for each lane chunk
+    (`packing.chunk_views`) the gated SGD update u_c = x_c - eta*theta*g_c
+    and the operator contraction y_c = T^T u_c run as one independent
+    fused unit, so XLA can mix chunk i while chunk i+1's update is still in
+    flight — the double-buffered FSDP-stream idiom (on the Pallas backend
+    the analogous `hier_mix_packed_chunked` issues one kernel launch per
+    chunk).
+
+    REDUCTION-ORDER CONTRACT: this path differs from ``overlap="none"`` in
+    two documented ways, so the two agree to f32 tolerance (tested at
+    1e-6 rtol in tests/test_compression.py), not bitwise:
+
+      * the mix contracts the PACKED buffer (one (W, W) x (W, c) einsum per
+        chunk) instead of one einsum per leaf — the same reduction-order
+        caveat `packing.all_f32` documents for the XLA flat paths;
+      * structured strategies (two_stage/ppermute) execute their
+        mathematically-equal dense (W, W) operator (st.v_op / st.z_op)
+        instead of the grouped mean-then-roll factorization.
+
+    The fused update replicates the Pallas kernel arithmetic (f32
+    accumulate, ``(eta * theta) * g`` grouping, one rounding to the leaf
+    dtype on unpack)."""
+    spec = packing.pack_spec(stacked)
+    x = packing.pack(stacked, spec)
+    g = packing.pack(grads, spec)
+    th = theta.astype(jnp.float32)[:, None]
+    t = op.astype(jnp.float32)
+    outs = []
+    for ch in packing.chunk_views(spec, num_chunks):
+        u = x[:, ch.lo:ch.hi] - eta * th * g[:, ch.lo:ch.hi]
+        outs.append(jnp.einsum("ij,ic->jc", t, u))
+    return packing.unpack(outs[0] if len(outs) == 1
+                          else jnp.concatenate(outs, axis=1), spec)
+
+
+def chunked_apply_operator(stacked: PyTree, op: jnp.ndarray,
+                           num_chunks: int) -> PyTree:
+    """Mix-only chunked path: the dense (W, W) operator contracts the
+    packed buffer one lane chunk at a time (no fused update — the
+    production harness keeps its possibly-stateful inner-optimizer update
+    per leaf and chunks just the mixing event, so chunk i's exchange can
+    overlap chunk i+1's compute).  Carries `chunked_update_mix`'s
+    reduction-order contract: packed per-chunk einsums instead of per-leaf
+    einsums, dense operator instead of the structured factorization —
+    rtol-equivalent to ``overlap="none"``, not bitwise."""
+    spec = packing.pack_spec(stacked)
+    x = packing.pack(stacked, spec)
+    t = op.astype(jnp.float32)
+    outs = [jnp.einsum("ij,ic->jc", t, x[:, ch.lo:ch.hi])
+            for ch in packing.chunk_views(spec, num_chunks)]
+    return packing.unpack(outs[0] if len(outs) == 1
+                          else jnp.concatenate(outs, axis=1), spec)
+
+
 def _pallas_opt_state(opt_state, theta):
     """Engine-owned bookkeeping for the kernel path: the fused kernel owns
     the parameter update, but the per-worker step counts advance exactly as
@@ -605,6 +666,11 @@ def make_timeline_step_fn(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
     results (``False`` = the legacy per-leaf loop, the benchmark baseline).
     """
     _check_kernel(cfg)
+    if cfg.overlap != "none":
+        raise ValueError(
+            "overlap='chunked' is an event-executor optimisation (chunked "
+            "mixing at plan events); the full every-slot scan has no "
+            "chunked form — use exec_mode='event' or overlap='none'")
     if pallas_packed is None:
         pallas_packed = packing.flat_paths_enabled()
     n = network.num_workers
@@ -669,8 +735,14 @@ class EventExecutor:
     def __init__(self, loss_fn, network: MultiLevelNetwork, cfg: SimConfig,
                  *, gate_mode: str):
         _check_kernel(cfg, structured_ok=True)
+        _check_overlap(cfg)
         self.cfg = cfg
         self.st = protocol.state_from_network(network)
+        if cfg.overlap == "chunked" and cfg.kernel != "pallas":
+            # chunked XLA events contract the dense (W, W) operator per
+            # lane chunk; structured strategies map to their dense forms
+            self._phase_dense = {protocol.PHASE_SUBNET: self.st.v_op,
+                                 protocol.PHASE_HUB: self.st.z_op}
         self.strategy = protocol.resolve_mixing(cfg)
         self._sample, self._local_update, self.optimizer = _slot_parts(
             loss_fn, network, cfg, gate_mode=gate_mode)
@@ -709,9 +781,21 @@ class EventExecutor:
 
     def _mix_event(self, stacked, opt_state, mix_state, grads, theta, op):
         if self.cfg.kernel == "pallas":
-            stacked = self._kops.hier_mix_packed(stacked, grads, op, theta,
-                                                 self.cfg.eta,
-                                                 block_c=self.cfg.block_c)
+            if self.cfg.overlap == "chunked":
+                stacked = self._kops.hier_mix_packed_chunked(
+                    stacked, grads, op, theta, self.cfg.eta,
+                    num_chunks=self.cfg.overlap_chunks,
+                    block_c=self.cfg.block_c)
+            else:
+                stacked = self._kops.hier_mix_packed(
+                    stacked, grads, op, theta, self.cfg.eta,
+                    block_c=self.cfg.block_c)
+            return stacked, _pallas_opt_state(opt_state, theta), mix_state
+        if self.cfg.overlap == "chunked":
+            op_mat = op if hasattr(op, "shape") else self._phase_dense[op]
+            stacked = chunked_update_mix(stacked, grads, op_mat, theta,
+                                         self.cfg.eta,
+                                         self.cfg.overlap_chunks)
             return stacked, _pallas_opt_state(opt_state, theta), mix_state
         stacked, opt_state = protocol.gated_inner_update(
             self.optimizer, stacked, opt_state, grads, theta)
@@ -868,11 +952,12 @@ def run_timeline(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
     stacked = replicate(init_params, n)
     carry = init_sim_carry(stacked, cfg, seed)
     dense = pol.needs_dense or plan.op_mats is not None
-    if dense and cfg.mixing != "dense":
-        raise ValueError(
-            "policies with partial-participation events (needs_dense) build "
-            "masked dense operators; they require mixing='dense' — like "
-            "unequal-size sub-networks")
+    # Partial-participation events (gossip) execute through per-event masked
+    # dense operators regardless of cfg.mixing: every registered strategy —
+    # the whole compression ladder included — runs under every policy.  A
+    # strict-subset gossip round has no compressed wire form, so those
+    # events cross at full precision (wire accounting charges dense bytes);
+    # full V/Z rounds (op_ids events) still use the strategy's wire format.
     if exec_mode == "full":
         if dense:
             raise ValueError(

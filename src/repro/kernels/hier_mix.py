@@ -54,7 +54,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.packing import pack, pack_spec, unpack
+from repro.core.packing import chunk_views, pack, pack_spec, unpack
 
 from repro.kernels._compat import CompilerParams as _CompilerParams
 
@@ -278,3 +278,32 @@ def hier_mix_packed(stacked_params, stacked_grads, op, theta, eta: float, *,
     out = _packed_call(x, g, op, jnp.asarray(theta, jnp.float32), eta,
                        block_c, interpret)
     return unpack(out, spec)
+
+
+def hier_mix_packed_chunked(stacked_params, stacked_grads, op, theta,
+                            eta: float, *, num_chunks: int = 4,
+                            block_c: int = 512, interpret: bool = False):
+    """`hier_mix_packed` as CHUNK-GRANULAR launches: the packed (W, sum C)
+    buffer is split into lane-aligned `packing.chunk_views` and each chunk
+    gets its OWN `pallas_call` (operator + theta re-fetched per launch).
+
+    The point is overlap: with one launch per chunk the runtime can overlap
+    chunk i's update+mix with chunk i+1's operand DMA (double-buffered in
+    the FSDP-stream idiom) instead of serializing one monolithic launch
+    behind the full buffer's fetch.  The contraction reduces over the
+    WORKER axis only, so every packed column's arithmetic is independent of
+    the chunking — bit-for-bit equal to the single-launch `hier_mix_packed`
+    (each launch pads its own lane tail with zeros, which contribute
+    nothing).  The extra cost is num_chunks - 1 re-fetches of the small
+    operator/theta operands.
+    """
+    spec = pack_spec(stacked_params)
+    x = pack(stacked_params, spec)
+    g = pack(stacked_grads, spec)
+    theta = jnp.asarray(theta, jnp.float32)
+    w = x.shape[0]
+    outs = [_packed_call(x[:, ch.lo:ch.hi], g[:, ch.lo:ch.hi], op, theta,
+                         eta, block_c, interpret)[:w, :ch.size]
+            for ch in chunk_views(spec, num_chunks)]
+    return unpack(outs[0] if len(outs) == 1
+                  else jnp.concatenate(outs, axis=1), spec)

@@ -21,7 +21,8 @@ from repro.kernels import flash_attention as fa_mod
 from repro.kernels import slstm_scan as slstm_mod
 from repro.kernels.hier_mix import (  # noqa: F401  (re-exported operators)
     GroupedOperator, hier_mix_chunks, hier_mix_packed as _hier_mix_packed,
-    hier_mix_tree, make_grouped_operator)
+    hier_mix_packed_chunked as _hier_mix_packed_chunked, hier_mix_tree,
+    make_grouped_operator)
 
 
 def _interpret_default() -> bool:
@@ -90,6 +91,20 @@ def hier_mix_packed(stacked_params, stacked_grads, op, theta, eta: float, *,
     operator or a `GroupedOperator` (fused two_stage / circulant mixing)."""
     return _hier_mix_packed(stacked_params, stacked_grads, op, theta, eta,
                             block_c=block_c, interpret=_interpret_default())
+
+
+def hier_mix_packed_chunked(stacked_params, stacked_grads, op, theta,
+                            eta: float, *, num_chunks: int = 4,
+                            block_c: int = 512):
+    """`hier_mix_packed` split into one launch per lane-aligned chunk of
+    the packed buffer (`packing.chunk_views`) so the runtime can overlap a
+    chunk's update+mix with the next chunk's operand DMA.  Bit-for-bit
+    equal to the single launch — the contraction reduces over workers
+    only."""
+    return _hier_mix_packed_chunked(stacked_params, stacked_grads, op, theta,
+                                    eta, num_chunks=num_chunks,
+                                    block_c=block_c,
+                                    interpret=_interpret_default())
 
 
 # ------------------------------------------------------------- slstm scan

@@ -173,15 +173,35 @@ class TrainHarness:
     """
 
     def __init__(self, cfg: ArchConfig, mll: MLLConfig, st: MLLState, *,
-                 gate_mode: str, impl: str = "xla", mesh=None):
+                 gate_mode: str, impl: str = "xla", mesh=None,
+                 overlap: str = "none", overlap_chunks: int = 4):
         if gate_mode not in ("bernoulli", "forced"):
             raise ValueError(f"unknown gate_mode {gate_mode!r}")
         if impl not in ("xla", "flash", "pallas", "chunked", "auto"):
             # an unrecognized impl would silently train through the XLA
             # attention path — the exact fallback this harness rules out
             raise ValueError(f"unknown impl {impl!r}")
+        if overlap not in ("none", "chunked"):
+            raise ValueError(f"unknown overlap {overlap!r}; "
+                             "expected none|chunked")
+        if overlap == "chunked":
+            if mesh is not None:
+                raise ValueError(
+                    "overlap='chunked' chunks the packed buffer on ONE "
+                    "device; under a mesh the collective lowerings already "
+                    "overlap by shard — use overlap='none' with --mesh")
+            if (mll.mixing not in ("dense", "two_stage", "ppermute")
+                    or mll.mix_dtype is not None):
+                raise ValueError(
+                    "overlap='chunked' mixes via a dense (W, W) operator "
+                    "over the packed f32 buffer; it requires mix_dtype="
+                    "None and mixing in ('dense', 'two_stage', 'ppermute')")
+            if overlap_chunks < 1:
+                raise ValueError(f"overlap_chunks must be >= 1, "
+                                 f"got {overlap_chunks}")
         self.cfg, self.mll, self.st, self.gate_mode = cfg, mll, st, gate_mode
         self.impl = impl
+        self.overlap, self.overlap_chunks = overlap, overlap_chunks
         self.mesh, self.spmd = mesh, None
         self.num_workers = int(st.rates.shape[0])
         if mesh is not None:
@@ -199,7 +219,8 @@ class TrainHarness:
             # fail at construction, not inside the first event's trace
             protocol.resolve_mixing(mll).validate_spmd(st, self.spmd)
         step = partial(mll_harness_step, cfg=cfg, mll=mll, st=st,
-                       gate_mode=gate_mode, impl=impl, spmd=self.spmd)
+                       gate_mode=gate_mode, impl=impl, spmd=self.spmd,
+                       overlap=overlap, overlap_chunks=overlap_chunks)
         # spmd-free twin used ONLY for `jax.eval_shape` (out_specs): the
         # collective lowerings call `axis_index`, which is unbound outside
         # shard_map — the global output shapes are identical either way
@@ -404,7 +425,8 @@ def run_plan(cfg: ArchConfig, mll: MLLConfig, network, st: MLLState,
              rate_model: str = "bernoulli",
              last_worker_loss: list | None = None,
              run_config: dict | None = None, impl: str = "xla",
-             mesh=None, log: Callable = print) -> HarnessRun:
+             mesh=None, overlap: str = "none", overlap_chunks: int = 4,
+             log: Callable = print) -> HarnessRun:
     """Drive a compiled `TrainHarness` over the whole plan.
 
     ``mesh`` switches the harness to shard_map execution (see
@@ -425,7 +447,8 @@ def run_plan(cfg: ArchConfig, mll: MLLConfig, network, st: MLLState,
     prefix of a longer one; a partial run of the full plan is).
     """
     harness = TrainHarness(cfg, mll, st, gate_mode=plan.gate_mode, impl=impl,
-                           mesh=mesh)
+                           mesh=mesh, overlap=overlap,
+                           overlap_chunks=overlap_chunks)
     if mesh is not None:
         train_state = shard_train_state(train_state, mesh,
                                         harness.num_workers)

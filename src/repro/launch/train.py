@@ -37,7 +37,8 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
 from repro.core.mllsgd import MLLConfig, build_network, build_state
-from repro.core.protocol import available_mixing, init_train_state
+from repro.core.protocol import (available_mixing, describe_mixing,
+                                 init_train_state)
 from repro.core.timeline import (RATE_MODELS, RateCalibration,
                                  available_policies, get_policy)
 from repro.data.pipeline import LMBatcher, make_token_stream, rng_from_state
@@ -76,6 +77,10 @@ class TrainLoopConfig:
                                      # None = single-device vmap.  NOT part
                                      # of the resume guard: trajectories and
                                      # checkpoints are device-count-portable
+    overlap: str = "none"            # "chunked": mix the packed buffer
+                                     # chunk-by-chunk (overlaps hub exchange
+                                     # with local compute; rtol-equivalent)
+    overlap_chunks: int = 4          # lane chunks per mixing event
 
 
 def replicate_params(params: PyTree, w: int) -> PyTree:
@@ -154,10 +159,10 @@ def run_training(cfg: ArchConfig, mll: MLLConfig, loop: TrainLoopConfig,
         st = build_state(mll, network)
 
     pol = get_policy(loop.policy)
-    if pol.needs_dense and mll.mixing != "dense":
-        raise ValueError(
-            f"policy={loop.policy!r} mixes strict worker subsets via masked "
-            "dense operators; it requires mixing='dense'")
+    # needs_dense policies (gossip) mix strict worker subsets via masked
+    # dense operators at full precision — compressed wire formats have no
+    # partial-participation form — so every registered strategy runs here:
+    # its wire format applies to the full V/Z rounds only.
     plan = pol.plan(network, mll.schedule, loop.steps,
                     np.random.default_rng(loop.seed),
                     rate_model=loop.rate_model)
@@ -187,7 +192,8 @@ def run_training(cfg: ArchConfig, mll: MLLConfig, loop: TrainLoopConfig,
     # draws and batch shapes consume the same rng stream)
     current = dict(plan_config(mll, network, plan, loop.policy,
                                loop.rate_model),
-                   arch=cfg.name, impl=loop.impl,
+                   arch=cfg.name, impl=loop.impl, overlap=loop.overlap,
+                   overlap_chunks=loop.overlap_chunks,
                    eval_every=loop.eval_every, seq_len=loop.seq_len,
                    batch_per_worker=loop.batch_per_worker,
                    tokens_per_worker=loop.tokens_per_worker,
@@ -200,6 +206,9 @@ def run_training(cfg: ArchConfig, mll: MLLConfig, loop: TrainLoopConfig,
             # checkpoints written before the kernel-training PR carry no
             # impl field; they were xla-impl runs by construction
             saved = dict(saved, impl="xla")
+        if saved is not None and "overlap" not in saved:
+            # pre-overlap checkpoints ran the unchunked event path
+            saved = dict(saved, overlap="none", overlap_chunks=4)
         if saved is not None and saved != current:
             diff = {k: (saved.get(k), current[k]) for k in current
                     if saved.get(k) != current[k]}
@@ -220,7 +229,8 @@ def run_training(cfg: ArchConfig, mll: MLLConfig, loop: TrainLoopConfig,
                    calibration=calibration, trace_path=loop.trace_path,
                    policy=loop.policy, rate_model=loop.rate_model,
                    last_worker_loss=last_worker_loss, run_config=current,
-                   impl=loop.impl, mesh=mesh, log=log)
+                   impl=loop.impl, mesh=mesh, overlap=loop.overlap,
+                   overlap_chunks=loop.overlap_chunks, log=log)
     return {"history": run.history, "avg_params": run.avg_params,
             "network": run.network, "plan": run.plan,
             "train_state": run.train_state, "calibration": run.calibration,
@@ -238,7 +248,9 @@ def main(argv=None):
     ap.add_argument("--q", type=int, default=4)
     ap.add_argument("--eta", type=float, default=0.05)
     ap.add_argument("--topology", default="complete")
-    ap.add_argument("--mixing", default="dense", choices=available_mixing())
+    ap.add_argument("--mixing", default="dense", metavar="NAME",
+                    help="registered mixing strategy; 'list' prints the "
+                         "registry with wire-format descriptions and exits")
     ap.add_argument("--inner-opt", default="sgd",
                     choices=tuple(sorted(optim_mod.OPTIMIZERS)))
     ap.add_argument("--subnets", type=int, default=2)
@@ -264,6 +276,14 @@ def main(argv=None):
                          "e.g. --mesh 4,2 on 8 devices (CPU: set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=8); "
                          "checkpoints stay portable across mesh shapes")
+    ap.add_argument("--overlap", default="none", choices=("none", "chunked"),
+                    help="'chunked' mixes the packed buffer chunk-by-chunk "
+                         "so hub exchange overlaps local compute (requires "
+                         "inner_opt=sgd and a dense-operator mixing; "
+                         "rtol-equivalent reduction-order change)")
+    ap.add_argument("--overlap-chunks", type=int, default=4,
+                    help="lane chunks per mixing event under --overlap "
+                         "chunked")
     ap.add_argument("--eval-every", type=int, default=16)
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--resume", action="store_true",
@@ -275,6 +295,13 @@ def main(argv=None):
     ap.add_argument("--trace", default=None,
                     help="export the event trace (simulator schema) here")
     args = ap.parse_args(argv)
+
+    if args.mixing == "list":
+        print(describe_mixing())
+        return
+    if args.mixing not in available_mixing():
+        ap.error(f"unknown mixing {args.mixing!r}; registered: "
+                 f"{', '.join(available_mixing())} (or 'list' to describe)")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     mesh = None
@@ -298,7 +325,8 @@ def main(argv=None):
                            policy=args.policy, rate_model=args.rate_model,
                            resume=args.resume, stop_slot=args.stop_slot,
                            trace_path=args.trace, impl=args.impl,
-                           mesh=mesh)
+                           mesh=mesh, overlap=args.overlap,
+                           overlap_chunks=args.overlap_chunks)
     out = run_training(cfg, mll, loop, num_subnets=args.subnets,
                        workers_per_subnet=args.workers_per_subnet)
     losses = out["history"]["avg_loss"]

@@ -35,7 +35,7 @@ from repro.configs.base import ArchConfig
 from repro.core import protocol
 from repro.core.mllsgd import MLLConfig, MLLState, apply_schedule, gate_sample, gated_sgd_update
 from repro.core.protocol import MLLTrainState, protocol_step
-from repro.core.timeline import apply_event_operator
+from repro.core.timeline import apply_event_operator, chunked_apply_operator
 from repro.models import model as model_mod
 from repro.models.pjit_utils import constraint
 
@@ -173,6 +173,7 @@ def mll_harness_step(train_state: MLLTrainState, batch: dict,
                      spmd_axis_name=None, impl: str = "xla",
                      remat: str = "none", microbatch: int = 1,
                      spmd: protocol.SpmdAxis | None = None,
+                     overlap: str = "none", overlap_chunks: int = 4,
                      ) -> tuple[MLLTrainState, dict]:
     """One PLAN-DRIVEN production slot: the tick of `mll_transformer_state_step`
     with the schedule's ``lax.switch`` replaced by a statically known event.
@@ -205,9 +206,22 @@ def mll_harness_step(train_state: MLLTrainState, batch: dict,
     gate at zero): the backward pass and the θ=0 inner update — a state
     no-op by construction — are skipped; only the per-worker loss (the
     metrics contract) and the mixing event run.
+
+    ``overlap="chunked"`` replaces the mixing contraction (only — the
+    inner-optimizer update stays per leaf, stateful optimizers included)
+    with `timeline.chunked_apply_operator`: the dense (W, W) operator over
+    the packed buffer one lane chunk at a time, so chunk i's exchange
+    overlaps chunk i+1's compute.  Structured strategies execute their
+    mathematically-equal dense operator (st.v_op / st.z_op) — together
+    with the packed-vs-per-leaf einsum this is the documented
+    reduction-order change: rtol-equivalent to ``overlap="none"``, not
+    bitwise.  Vmap path only (`TrainHarness` refuses chunked + mesh).
     """
     if gate_mode not in ("bernoulli", "forced"):
         raise ValueError(f"unknown gate_mode {gate_mode!r}")
+    if overlap not in ("none", "chunked"):
+        raise ValueError(f"unknown overlap {overlap!r}; "
+                         "expected none|chunked")
     step = train_state.step.astype(jnp.int32) + 1
     if compute_grads:
         grads, metrics = per_worker_grads(train_state.params, batch, cfg,
@@ -235,8 +249,15 @@ def mll_harness_step(train_state: MLLTrainState, batch: dict,
         params, opt_state = train_state.params, train_state.opt_state
     mix_state = train_state.mix_state
     sharded = spmd is not None and spmd.size > 1
+    chunked = overlap == "chunked"
     if op is not None:
-        params = apply_event_operator(params, op, spmd=spmd)
+        if chunked:
+            params = chunked_apply_operator(params, op, overlap_chunks)
+        else:
+            params = apply_event_operator(params, op, spmd=spmd)
+    elif chunked and phase != protocol.PHASE_LOCAL:
+        op_mat = st.v_op if phase == protocol.PHASE_SUBNET else st.z_op
+        params = chunked_apply_operator(params, op_mat, overlap_chunks)
     elif phase != protocol.PHASE_LOCAL:
         # mix_state is always populated up front (init_train_state) — a
         # structure change mid-run would retrace every compiled segment

@@ -1,0 +1,286 @@
+"""Compression ladder + chunked overlap: the properties every registered
+strategy must satisfy.
+
+  * fixed-point preservation — when all workers already agree and the
+    shared state is exactly representable in the strategy's wire format, a
+    hub round is the identity and EF residuals stay (numerically) zero;
+  * consensus contraction — repeated V+Z rounds shrink the worker spread
+    under every EF variant (compression never breaks mixing), with the EF
+    residual bounded by the quantization step;
+  * wire accounting — the ladder's `wire_bytes` ordering and the dense
+    anchor (edges x 4 B x packed cols);
+  * chunked overlap — `chunked_update_mix` / `chunked_apply_operator`
+    match the unfused reference at 1e-6 rtol (the reduction-order contract
+    promised in their docstrings), `hier_mix_packed_chunked` matches the
+    single launch bit for bit, and `run_timeline` trajectories agree
+    between overlap="none" and "chunked";
+  * `chunk_views` — lane alignment and exact coverage.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packing, protocol
+from repro.core.hierarchy import MLLSchedule
+from repro.core.mllsgd import MLLConfig, build_network, build_state
+from repro.core.protocol import (available_mixing, describe_mixing,
+                                 get_mixing, _hub_edges)
+from repro.core.simulator import SimConfig, replicate
+from repro.core.timeline import (chunked_apply_operator, chunked_update_mix,
+                                 make_timeline_step_fn, run_timeline)
+from repro.data.pipeline import make_classification
+from repro.kernels import ops as kops
+
+
+def _pow2_setup(rates=1.0):
+    """2 pods x 4 workers: power-of-2 group sizes and (for uniform rates)
+    dyadic mixing weights, so exact-representable inputs stay exact
+    through the grouping arithmetic."""
+    cfg = MLLConfig(tau=2, q=2, eta=0.1, granularity="worker_per_data",
+                    hub_topology="ring", worker_rates=rates)
+    net = build_network(cfg, 2, 4)
+    return net, build_state(cfg, net)
+
+
+def _exact_params(name, w):
+    """Per-worker-identical params whose shared value round-trips the
+    strategy's wire format exactly: bf16-grid integers by default; amax
+    pinned to the quantizer's top level for int8/int4 (scale = 1); one
+    nonzero per leaf for top-k; a rank-1 matrix leaf for PowerSGD."""
+    rng = np.random.default_rng(7)
+    if name in ("int8", "int8_ef"):
+        a = rng.integers(-127, 128, (5, 4)).astype(np.float32)
+        b = rng.integers(-127, 128, (4,)).astype(np.float32)
+        a[0, 0], b[0] = 127.0, 127.0
+    elif name == "int4_ef":
+        a = rng.integers(-7, 8, (5, 4)).astype(np.float32)
+        b = rng.integers(-7, 8, (4,)).astype(np.float32)
+        a[0, 0], b[0] = 7.0, 7.0
+    elif name == "topk_ef":
+        a = np.zeros((5, 4), np.float32)
+        b = np.zeros((4,), np.float32)
+        a[2, 1], b[3] = 3.0, -5.0              # <= k nonzeros per leaf
+    elif name == "powersgd":
+        u = rng.integers(-4, 5, (5,)).astype(np.float32)
+        v = rng.integers(-4, 5, (4,)).astype(np.float32)
+        a = np.outer(u, v)                     # rank 1 <= rank r
+        b = rng.integers(-4, 5, (4,)).astype(np.float32)
+    else:
+        a = rng.integers(-8, 9, (5, 4)).astype(np.float32)
+        b = rng.integers(-8, 9, (4,)).astype(np.float32)
+    params = {"w": jnp.asarray(a), "b": jnp.asarray(b)}
+    return replicate(params, w)
+
+
+@pytest.mark.parametrize("name", available_mixing())
+def test_hub_round_fixed_point(name):
+    """All-workers-equal exact-representable state passes a hub round
+    unchanged; EF residuals (when the strategy carries them) stay zero."""
+    net, st = _pow2_setup()
+    stacked = _exact_params(name, net.num_workers)
+    strat = get_mixing(name)
+    state = strat.init_state(stacked)
+    out, new_state = strat.hub_with_state(stacked, st, state)
+    tol = 1e-5 if name == "powersgd" else 0.0  # QR projection rounding
+    for a, b in zip(jax.tree.leaves(stacked), jax.tree.leaves(out)):
+        np.testing.assert_allclose(a, b, atol=tol)
+    ef = new_state.get("ef") if isinstance(new_state, dict) else new_state
+    for leaf in jax.tree.leaves(ef):
+        if leaf.dtype == jnp.float32 and leaf.size:
+            np.testing.assert_allclose(leaf, 0.0, atol=tol)
+
+
+def _spread(stacked):
+    return max(float(jnp.max(jnp.abs(x - x.mean(axis=0, keepdims=True))))
+               for x in jax.tree.leaves(stacked))
+
+
+@pytest.mark.parametrize("name", ["int8_ef", "int4_ef", "topk_ef",
+                                  "powersgd"])
+def test_ef_mixing_contracts_worker_spread(name):
+    """Repeated V+Z rounds drive heterogeneous workers toward consensus
+    under every EF strategy on a fixed seed: error feedback re-injects
+    what the wire dropped, so compression slows mixing but never stalls
+    it, and the residual stays bounded by the quantization step."""
+    net, st = _pow2_setup(rates=(1.0, 0.9, 0.8, 1.0, 0.7, 1.0, 0.6, 0.9))
+    key = jax.random.PRNGKey(3)
+    params = {"w": jax.random.normal(key, (5, 4)),
+              "b": jax.random.normal(jax.random.fold_in(key, 1), (4,))}
+    stacked = replicate(params, net.num_workers)
+    stacked = jax.tree.map(
+        lambda x: x + 0.5 * jax.random.normal(
+            jax.random.fold_in(key, x.ndim), x.shape), stacked)
+    strat = get_mixing(name)
+    state = strat.init_state(stacked)
+    spread0 = _spread(stacked)
+    for _ in range(8):
+        stacked, state = strat.subnet_with_state(stacked, st, state)
+        stacked, state = strat.hub_with_state(stacked, st, state)
+    assert _spread(stacked) < 0.5 * spread0
+    ef = state.get("ef") if isinstance(state, dict) else state
+    for leaf in jax.tree.leaves(ef):
+        assert float(jnp.max(jnp.abs(leaf))) < 2.0 * spread0
+
+
+# ------------------------------------------------------------ wire accounting
+def test_wire_bytes_ladder_ordering():
+    net, st = _pow2_setup()
+    stacked = _exact_params("dense", net.num_workers)
+    spec = packing.pack_spec(stacked)
+    wb = {n: get_mixing(n).wire_bytes(st, spec)
+          for n in ("dense", "bf16", "int8_ef", "int4_ef", "topk_ef")}
+    assert wb["int4_ef"] < wb["int8_ef"] < wb["bf16"] < wb["dense"]
+    assert wb["topk_ef"] < wb["bf16"]
+    assert wb["dense"] == _hub_edges(st) * 4 * spec.total_cols
+
+
+def test_describe_mixing_covers_registry():
+    text = describe_mixing()
+    for name in available_mixing():
+        assert name in text
+    assert "bf16 hub models" in text      # one-line wire formats, not names
+
+
+def test_cli_mixing_list(capsys):
+    from repro.launch.train import main
+    main(["--mixing", "list"])
+    out = capsys.readouterr().out
+    assert "int4_ef" in out and "wire format" in out
+
+
+# ---------------------------------------------------------- chunked overlap
+def test_chunk_views_cover_and_align():
+    stacked = _exact_params("dense", 8)
+    spec = packing.pack_spec(stacked)
+    for n in (1, 2, 3, 7):
+        chunks = packing.chunk_views(spec, n)
+        assert chunks[0].lo == 0 and chunks[-1].hi == spec.total_cols
+        for a, b in zip(chunks, chunks[1:]):
+            assert a.hi == b.lo
+        for ch in chunks[:-1]:
+            assert ch.lo % 128 == 0 and ch.size % 128 == 0
+        assert len(chunks) <= n
+    with pytest.raises(ValueError):
+        packing.chunk_views(spec, 0)
+
+
+def test_chunked_update_mix_matches_unfused():
+    """The docstring contract: chunked fused update+mix agrees with the
+    per-leaf unfused reference at 1e-6 rtol (reduction-order change)."""
+    net, st = _pow2_setup()
+    w = net.num_workers
+    key = jax.random.PRNGKey(5)
+    stacked = replicate({"w": jax.random.normal(key, (5, 4)),
+                         "b": jax.random.normal(key, (4,))}, w)
+    grads = jax.tree.map(
+        lambda x: jax.random.normal(jax.random.fold_in(key, x.size),
+                                    x.shape), stacked)
+    theta = jnp.asarray([1.0, 0.0, 1.0, 1.0, 0.0, 1.0, 1.0, 1.0])
+    op = jnp.asarray(st.z_op)
+    eta = 0.05
+    th = theta[:, None]
+    want = jax.tree.map(
+        lambda x, g: jnp.einsum(
+            "ij,i...->j...", op,
+            x - eta * th.reshape((w,) + (1,) * (x.ndim - 1)) * g),
+        stacked, grads)
+    for n in (1, 3, 4):
+        got = chunked_update_mix(stacked, grads, op, theta, eta, n)
+        for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
+            np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+        mixed = chunked_apply_operator(stacked, op, n)
+        want_mix = jax.tree.map(
+            lambda x: jnp.einsum("ij,i...->j...", op, x), stacked)
+        for a, b in zip(jax.tree.leaves(want_mix), jax.tree.leaves(mixed)):
+            np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+
+def test_hier_mix_packed_chunked_bit_identical():
+    """Chunk-granular Pallas launches reproduce the single launch bit for
+    bit — the contraction reduces over the worker axis only."""
+    w = 8
+    key = jax.random.PRNGKey(9)
+    stacked = replicate({"w": jax.random.normal(key, (5, 4)),
+                         "b": jax.random.normal(key, (4,))}, w)
+    grads = jax.tree.map(
+        lambda x: jax.random.normal(jax.random.fold_in(key, x.size),
+                                    x.shape), stacked)
+    op = jnp.eye(w) * 0.5 + 0.5 / w
+    theta = jnp.ones((w,))
+    want = kops.hier_mix_packed(stacked, grads, op, theta, 0.05)
+    got = kops.hier_mix_packed_chunked(stacked, grads, op, theta, 0.05,
+                                       num_chunks=3)
+    for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _tiny_run(overlap, mixing, policy, chunks=3, slots=128):
+    cfg0 = MLLConfig(tau=2, q=2, eta=0.1, granularity="worker_per_data",
+                     hub_topology="ring",
+                     worker_rates=(1.0, 0.5, 0.9, 1.0, 0.3, 0.7))
+    net = build_network(cfg0, 2, 3)
+    data = make_classification(net.num_workers, 40, dim=6, num_classes=3,
+                               test_size=64, seed=1)
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (6, 3)) * 0.1,
+              "b": jnp.zeros((3,))}
+
+    def loss_fn(p, batch):
+        logits = batch["x"] @ p["w"] + p["b"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, batch["y"][:, None],
+                                   axis=-1)[:, 0]
+        return (lse - gold).mean()
+
+    def acc_fn(p, batch):
+        logits = batch["x"] @ p["w"] + p["b"]
+        return (logits.argmax(-1) == batch["y"]).mean()
+
+    cfg = SimConfig(eta=0.05, batch_size=16, eval_every=64, mixing=mixing,
+                    overlap=overlap, overlap_chunks=chunks)
+    return run_timeline(loss_fn, acc_fn, params, data.worker_data(),
+                        data.full, data.test, net, MLLSchedule(tau=2, q=2),
+                        slots=slots, policy=policy, cfg=cfg, seed=0)
+
+
+@pytest.mark.parametrize("mixing,policy", [("dense", "barrier"),
+                                           ("dense", "gossip"),
+                                           ("two_stage", "deadline")])
+def test_timeline_overlap_chunked_matches_none(mixing, policy):
+    r0 = _tiny_run("none", mixing, policy)
+    r1 = _tiny_run("chunked", mixing, policy)
+    for a, b in zip(jax.tree.leaves(r0.final_avg_params),
+                    jax.tree.leaves(r1.final_avg_params)):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(r0.train_loss, r1.train_loss, rtol=1e-5)
+
+
+def test_overlap_guards():
+    bad = SimConfig(overlap="sometimes")
+    with pytest.raises(ValueError, match="unknown overlap"):
+        from repro.core.simulator import _check_overlap
+        _check_overlap(bad)
+    from repro.core.simulator import _check_overlap
+    with pytest.raises(ValueError, match="inner_opt='sgd'"):
+        _check_overlap(SimConfig(overlap="chunked", inner_opt="adam"))
+    with pytest.raises(ValueError, match="chunked"):
+        _check_overlap(SimConfig(overlap="chunked", mixing="int8_ef"))
+    cfg0 = MLLConfig(tau=2, q=2, eta=0.1, granularity="worker_per_data",
+                     hub_topology="ring", worker_rates=1.0)
+    net = build_network(cfg0, 2, 2)
+    with pytest.raises(ValueError, match="scan"):
+        make_timeline_step_fn(lambda p, b: 0.0, net,
+                              SimConfig(overlap="chunked"),
+                              gate_mode="bernoulli")
+
+
+@pytest.mark.parametrize("mixing", ["int4_ef", "topk_ef", "powersgd"])
+def test_ladder_trains_under_readiness_policies(mixing):
+    """Every ladder rung runs (and learns) under barrier and deadline;
+    gossip coverage lives in test_timeline (masked dense semantics)."""
+    for policy in ("barrier", "deadline"):
+        res = _tiny_run("none", mixing, policy, slots=256)
+        assert res.train_loss[-1] < res.train_loss[0]

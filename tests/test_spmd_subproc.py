@@ -70,18 +70,21 @@ TRAIN_SETUP = """
 
 @pytest.mark.subproc
 def test_spmd_bit_identity_grouped_and_dense():
-    """deadline x two_stage (psum subnet + ppermute hub rolls) and
-    gossip x dense (partial-participation composed operators) match the
-    vmap path bit for bit on a (4, 2) mesh over 8 forced host devices."""
+    """deadline x two_stage (psum subnet + ppermute hub rolls), gossip x
+    dense (partial-participation composed operators), and deadline x bf16
+    (hub rolls permuting BF16 wire buffers) match the vmap path bit for
+    bit on a (4, 2) mesh over 8 forced host devices."""
     out = _run(TRAIN_SETUP + """
         for policy, mixing in (("deadline", "two_stage"),
-                               ("gossip", "dense")):
+                               ("gossip", "dense"),
+                               ("deadline", "bf16")):
             assert_biteq(go(None, policy, mixing),
                          go((4, 2), policy, mixing))
             print("BITEQ", policy, mixing)
     """)
     assert "BITEQ deadline two_stage" in out
     assert "BITEQ gossip dense" in out
+    assert "BITEQ deadline bf16" in out
 
 
 @pytest.mark.subproc
